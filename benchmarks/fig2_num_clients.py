@@ -1,0 +1,23 @@
+"""Paper Fig. 2 (and Fig. 7): effect of the participating-client count n.
+
+Claim reproduced (Corollary 4.11): larger n converges faster."""
+from benchmarks.common import QUICK, csv_row, run_federated
+
+
+def main(rounds: int = 0):
+    rounds = rounds or (40 if QUICK else 120)
+    rows = []
+    finals = {}
+    for n in (2, 5, 10, 20):
+        r = run_federated("fedams", rounds=rounds, n=n)
+        finals[n] = sum(r.losses[-5:]) / 5
+        rows.append(csv_row(f"fig2_n{n}", r.us_per_round,
+                            f"final_loss={finals[n]:.4f}"))
+    ok = finals[20] <= finals[2] + 0.02
+    rows.append(csv_row("fig2_claim", 0, f"larger_n_faster={ok}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,22 @@
+"""Paper Fig. 6 / Appendix B.1: empirical justification of Assumption 4.17 —
+the compression-dissimilarity constant gamma stays bounded during training."""
+from benchmarks.common import QUICK, csv_row, run_federated
+
+
+def main(rounds: int = 0):
+    rounds = rounds or (30 if QUICK else 100)
+    rows = []
+    for comp in ("sign", "topk"):
+        r = run_federated("fedcams", rounds=rounds, compressor=comp,
+                          ratio=1 / 64)
+        gmax = max(r.gammas)
+        gmean = sum(r.gammas) / len(r.gammas)
+        rows.append(csv_row(f"fig6_gamma_{comp}", r.us_per_round,
+                            f"gamma_max={gmax:.3f};gamma_mean={gmean:.3f};"
+                            f"bounded={gmax < 10.0}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

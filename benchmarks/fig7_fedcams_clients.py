@@ -1,0 +1,25 @@
+"""Paper Fig. 7: FedCAMS with different participating-client counts n —
+the compressed algorithm keeps the n-scaling of Corollary 4.11 / B.2
+(partial-participation analysis, Appendix B.4)."""
+from benchmarks.common import QUICK, csv_row, run_federated
+
+
+def main(rounds: int = 0):
+    rounds = rounds or (40 if QUICK else 120)
+    rows = []
+    finals = {}
+    for n in (2, 5, 10, 20):
+        r = run_federated("fedcams", rounds=rounds, n=n, compressor="topk",
+                          ratio=1 / 64)
+        finals[n] = sum(r.losses[-5:]) / 5
+        rows.append(csv_row(f"fig7_fedcams_n{n}", r.us_per_round,
+                            f"final_loss={finals[n]:.4f}"))
+    ok = finals[20] <= finals[2] + 0.02
+    rows.append(csv_row("fig7_claim", 0,
+                        f"larger_n_faster_under_compression={ok}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

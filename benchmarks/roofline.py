@@ -1,0 +1,57 @@
+"""Roofline report: renders results/dryrun.json (produced by
+``python -m repro.launch.dryrun``) as the per-(arch x shape x mesh) table
+used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def load(path: str = DEFAULT):
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(path: str = DEFAULT, tag: str = "baseline"):
+    out = []
+    for key, rec in sorted(load(path).items()):
+        if not key.startswith(tag + "/"):
+            continue
+        _, mesh, arch, shape = key.split("/")
+        if rec.get("status") == "skipped":
+            out.append((mesh, arch, shape, "SKIP", rec["reason"], "", "", ""))
+            continue
+        if rec.get("status") != "ok":
+            out.append((mesh, arch, shape, "ERROR",
+                        rec.get("error", "")[:60], "", "", ""))
+            continue
+        rl = rec["roofline"]
+        out.append((mesh, arch, shape, rl["dominant"],
+                    f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+                    f"{rl['collective_s']:.3e}", f"{rl['useful_ratio']:.3f}"))
+    return out
+
+
+def main(path: str = DEFAULT, tag: str = "baseline"):
+    lines = []
+    for mesh, arch, shape, dom, c, m, coll, useful in rows(path, tag):
+        lines.append(
+            f"roofline_{mesh}_{arch}_{shape},0,"
+            f"dominant={dom};compute_s={c};memory_s={m};"
+            f"collective_s={coll};useful={useful}")
+    if not lines:
+        lines.append("roofline,0,missing=run python -m repro.launch.dryrun")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(*sys.argv[1:]):
+        print(line)

@@ -1,0 +1,50 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set BENCH_PRESET=full for the
+long (paper-protocol-length) runs; the default quick preset keeps the whole
+suite CPU-friendly.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (fig1_fedams_vs_baselines, fig2_num_clients,
+                        fig3_local_epochs, fig4_compression, fig6_gamma,
+                        fig7_fedcams_clients, roofline, table1_bits)
+
+SECTIONS = {
+    "fig1": lambda: fig1_fedams_vs_baselines.main("mlp"),
+    "fig1_convmixer": lambda: fig1_fedams_vs_baselines.main("convmixer",
+                                                            rounds=15),
+    "fig2": fig2_num_clients.main,
+    "fig3": fig3_local_epochs.main,
+    "fig4": fig4_compression.main,
+    "fig6": fig6_gamma.main,
+    "fig7": fig7_fedcams_clients.main,
+    "table1": table1_bits.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        if name not in SECTIONS:
+            print(f"{name},0,ERROR=unknown section", flush=True)
+            continue
+        try:
+            for row in SECTIONS[name]():
+                print(row, flush=True)
+        except Exception as e:  # keep the suite going
+            print(f"{name},0,ERROR={type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Tables 1/2: communication-bit accounting for scaled-sign and top-k,
+one-way and two-way, plus the concrete ResNet-18-sized (d=11.2M) 500-round
+costs from Table 2."""
+from benchmarks.common import csv_row
+
+from repro.core.compressors import make_compressor
+
+
+def bits_table(d: int, T: int, n: int):
+    unc = 32 * d * 2 * T * n
+    rows = {}
+    for name, ratio in (("sign", None), ("topk64", 1 / 64),
+                        ("topk128", 1 / 128), ("topk256", 1 / 256)):
+        comp = make_compressor("sign" if name == "sign" else "topk",
+                               ratio or 1 / 64)
+        one_way = (comp.bits_per_message(d) + 32 * d) * T * n
+        two_way = comp.bits_per_message(d) * 2 * T * n
+        rows[name] = (unc, one_way, two_way)
+    return rows
+
+
+def main():
+    d, T, n = 11_200_000, 500, 10   # ResNet-18-sized, Table 2 protocol
+    rows = []
+    for name, (unc, ow, tw) in bits_table(d, T, n).items():
+        rows.append(csv_row(
+            f"table1_{name}", 0,
+            f"uncompressed={unc:.3g};one_way={ow:.3g};two_way={tw:.3g};"
+            f"saving_two_way={unc/tw:.0f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,63 @@
+"""Serve a small model with batched requests: prefill a batch of prompts,
+then greedy-decode continuations through the KV-cache path (the same code
+the decode_32k / long_500k dry-runs lower for the production mesh).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma2-2b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import Model, greedy_sample
+from repro.sharding.rules import ParallelContext
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma2-2b",
+                help="architecture id (smoke variant is served)")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--gen", type=int, default=32)
+args = ap.parse_args()
+
+spec = get_arch(args.arch)
+cfg = spec.smoke
+if cfg.is_encoder:
+    raise SystemExit(f"{args.arch} is encoder-only (no decode)")
+max_len = args.prompt_len + args.gen
+model = Model(cfg, tp=1)
+ctx = ParallelContext()
+params = model.init(jax.random.PRNGKey(0))
+
+prompts = np.random.default_rng(0).integers(
+    0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+
+prefill = jax.jit(lambda p, t: model.prefill(p, t, ctx, max_len=max_len))
+decode = jax.jit(lambda p, t, c, pos: model.decode_step(
+    p, t, c, pos, ctx, max_len=max_len))
+
+t0 = time.time()
+logits, caches = prefill(params, jnp.asarray(prompts))
+tok = greedy_sample(logits, ctx)[:, None].astype(jnp.int32)
+print(f"prefill {args.batch}x{args.prompt_len}: {(time.time()-t0)*1e3:.0f} ms")
+
+out = [np.asarray(tok[:, 0])]
+t0 = time.time()
+for i in range(args.gen - 1):
+    lg, caches = decode(params, tok, caches, jnp.int32(args.prompt_len + i))
+    tok = greedy_sample(lg, ctx)[:, None].astype(jnp.int32)
+    out.append(np.asarray(tok[:, 0]))
+dt = time.time() - t0
+gen = np.stack(out, 1)
+print(f"decode: {dt/(args.gen-1)*1e3:.1f} ms/step, "
+      f"{args.batch*(args.gen-1)/dt:.0f} tok/s")
+for b in range(min(args.batch, 3)):
+    print(f"  request[{b}]: ...{prompts[b,-4:].tolist()} -> "
+          f"{gen[b,:12].tolist()}...")

@@ -1,0 +1,13 @@
+"""FedCAMS (Communication-Efficient Adaptive Federated Learning, ICML 2022)
+as a production multi-pod JAX/Pallas framework.
+
+Public surface:
+    repro.core     — FedAMS/FedCAMS, compressors, error feedback, rounds,
+                     FederatedTrainer facade
+    repro.models   — the six-family architecture substrate (Model)
+    repro.configs  — the 10 assigned architecture configs + dataclasses
+    repro.kernels  — Pallas TPU kernels (+ jnp oracles)
+    repro.launch   — production mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

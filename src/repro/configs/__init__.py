@@ -1,0 +1,15 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    ExperimentConfig,
+    FedConfig,
+    MeshConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    MTPConfig,
+    RGLRUConfig,
+    ShapeConfig,
+    TrainConfig,
+    XLSTMConfig,
+)
+from repro.configs.registry import ARCH_IDS, ArchSpec, all_archs, get_arch  # noqa: F401

@@ -1,0 +1,13 @@
+"""The paper's contribution: FedAMS / FedCAMS and their substrate.
+
+Public surface: compressors, error feedback, server optimizers, and the two
+round executors (FedSim simulation + build_fed_round mesh SPMD)."""
+from repro.core.api import FederatedTrainer  # noqa: F401
+from repro.core.compressors import Compressor, make_compressor  # noqa: F401
+from repro.core.error_feedback import ef_compress, ef_compress_masked  # noqa: F401
+from repro.core.rounds import (FedMeshState, FedSim, SimState,  # noqa: F401
+                               build_fed_round, fed_batch_defs,
+                               fed_state_defs, init_fed_state)
+from repro.core.sampling import participation_mask, sample_clients  # noqa: F401
+from repro.core.server_opt import (ServerState, init_server_state,  # noqa: F401
+                                   server_update)

@@ -1,0 +1,115 @@
+"""High-level facade: ``FederatedTrainer`` wires data, model/loss, the
+paper's algorithm and checkpointing into a train() loop — the 10-line entry
+point the examples and external users drive.
+
+Two backends, selected by ``mesh``:
+  * ``mesh=None``  — the pure simulation path (FedSim): arbitrary client
+    count, exact paper semantics, single device.
+  * ``mesh=...``   — the SPMD mesh path (shard_map fed_round): clients are
+    mesh-axis indices with TP-sharded replicas.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import FedConfig, TrainConfig
+from repro.core.rounds import (FedSim, build_fed_round, fed_batch_defs,
+                               fed_state_defs, init_fed_state)
+from repro.core.sampling import sample_clients
+from repro.models import params as pdefs
+from repro.sharding.rules import ParallelContext
+
+
+@dataclass
+class FederatedTrainer:
+    fed: FedConfig
+    train: TrainConfig = field(default_factory=TrainConfig)
+    # simulation backend
+    loss_fn: Optional[Callable] = None          # (params, batch) -> (loss, aux)
+    init_params: Optional[object] = None
+    data: Optional[object] = None                # needs .round_batches(...)
+    # mesh backend
+    model: Optional[object] = None               # repro.models.Model
+    mesh: Optional[object] = None
+    lm_data: Optional[object] = None             # needs .mesh_batch(...)
+
+    def __post_init__(self):
+        self.history: List[Dict] = []
+        if self.mesh is None:
+            assert self.loss_fn is not None and self.init_params is not None
+            self._sim = FedSim(self.loss_fn, self.fed)
+            self._state = self._sim.init(self.init_params)
+        else:
+            tp = dict(zip(self.mesh.axis_names,
+                          self.mesh.devices.shape)).get("model", 1)
+            assert self.model is not None and self.model.tp == tp
+            sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            hierarchical = "data" not in self.fed.client_axes
+            ctx = ParallelContext(
+                # name the axis even at size 1: vma tracking needs the psum
+                # to prove replication over a mesh axis that exists
+                model_axis="model" if "model" in sizes else None, tp=tp,
+                data_axis="data" if (hierarchical and "data" in sizes) else None,
+                dp=sizes.get("data", 1) if hierarchical else 1,
+                client_axes=self.fed.client_axes,
+                num_clients=self.fed.num_clients,
+                tp_collective=self.train.tp_collective)
+            sdefs = fed_state_defs(self.model, self.fed)
+            ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
+            bdefs = fed_batch_defs(self.model, self.fed, self.train)
+            bsp = jax.tree.map(lambda d: d.spec, bdefs, is_leaf=pdefs.is_def)
+            rnd = build_fed_round(self.model, self.fed, self.train, ctx)
+            self._step = jax.jit(jax.shard_map(
+                rnd, mesh=self.mesh, in_specs=(ssp, bsp, P()),
+                out_specs=(ssp, {"loss": P()})))
+            self._state = init_fed_state(self.model, self.fed,
+                                         jax.random.PRNGKey(self.train.seed))
+
+    @property
+    def params(self):
+        return self._state.params
+
+    def run(self, rounds: Optional[int] = None, *, batch_size: int = 20,
+            log: Optional[Callable[[str], None]] = print):
+        rounds = rounds or self.train.rounds
+        rng = jax.random.PRNGKey(self.train.seed + 1)
+        t0 = time.time()
+        for r in range(rounds):
+            if self.mesh is None:
+                rng, k1, k2 = jax.random.split(rng, 3)
+                n = self.fed.participating or self.fed.num_clients
+                idx = np.asarray(sample_clients(k1, self.fed.num_clients, n))
+                raw = self.data.round_batches(idx, r, self.fed.local_steps,
+                                              batch_size)
+                self._state, met = self._sim.round(
+                    self._state, jax.tree.map(jnp.asarray, raw),
+                    jnp.asarray(idx), k2)
+            else:
+                raw = self.lm_data.mesh_batch(r, self.fed.local_steps,
+                                              self.train.global_batch,
+                                              self.train.seq_len)
+                self._state, met = self._step(
+                    self._state, {k: jnp.asarray(v) for k, v in raw.items()},
+                    jnp.int32(r))
+            rec = {k: float(v) for k, v in met.items()}
+            rec["round"] = r
+            self.history.append(rec)
+            if log and (r % self.train.log_every == 0 or r == rounds - 1):
+                log(f"round {r:4d}  loss {rec['loss']:8.4f}  "
+                    f"({time.time() - t0:.1f}s)")
+            if (self.train.checkpoint_every
+                    and r % self.train.checkpoint_every == 0 and r > 0):
+                self.save(f"ckpt_round{r}")
+        return self.history
+
+    def save(self, path: str):
+        from repro.checkpoint import save_pytree
+        save_pytree(path, jax.device_get(self._state._asdict()),
+                    {"round": len(self.history), "algo": self.fed.algorithm})

@@ -1,0 +1,166 @@
+"""Biased compressors C: R^d -> R^d (paper §4.2, Assumption 4.14).
+
+All compressors return a *dense* tensor of the same shape (the compressed
+message is a sparse/low-bit encoding of it; ``bits_per_message`` accounts for
+the wire format, matching the paper's Table 1). ``q_bound`` gives the
+contraction constant of Assumption 4.14, property-tested in
+``tests/test_compressors.py``.
+
+``blocktopk`` is the TPU-native variant (DESIGN.md §3): exact top-k' inside
+fixed-size blocks. Per block ‖C(x_b)−x_b‖² ≤ (1−k'/B)‖x_b‖², so the global
+contraction bound q = sqrt(1−r) is preserved.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class Compressor:
+    name: str
+    compress: Callable                      # (x, rng=None) -> x_hat (dense)
+    bits_per_message: Callable              # d -> wire bits
+    q_bound: Callable                       # (x,) -> q (Assumption 4.14)
+    ratio: float = 1.0
+
+
+def _topk_flat(x, k):
+    flat = x.reshape(-1)
+    vals, idx = lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def make_topk(ratio: float) -> Compressor:
+    def compress(x, rng=None):
+        k = max(1, int(round(ratio * x.size)))
+        return _topk_flat(x, k)
+
+    return Compressor(
+        name=f"topk_{ratio:g}",
+        compress=compress,
+        # value + index per kept coordinate (paper footnote 8: "roughly double")
+        bits_per_message=lambda d: 64 * max(1, int(round(ratio * d))),
+        q_bound=lambda x: math.sqrt(max(1.0 - ratio, 0.0)),
+        ratio=ratio,
+    )
+
+
+def block_layout(d: int, block: int):
+    """Shared block layout for the jnp and Pallas blockwise top-k paths:
+    block size is a multiple of 128 (TPU lane width), capped at ``block``."""
+    bs = min(block, ((d + 127) // 128) * 128)
+    nb = -(-d // bs)
+    return bs, nb
+
+
+def make_blocktopk(ratio: float, block: int = 2048) -> Compressor:
+    def compress(x, rng=None):
+        flat = x.reshape(-1)
+        d = flat.size
+        bs, nb = block_layout(d, block)
+        pad = nb * bs - d
+        xb = jnp.pad(flat, (0, pad)).reshape(nb, bs)
+        k = max(1, int(round(ratio * bs)))
+        vals, idx = lax.top_k(jnp.abs(xb), k)
+        kept = jnp.take_along_axis(xb, idx, axis=1)
+        out = jnp.zeros_like(xb).at[
+            jnp.arange(nb)[:, None], idx].set(kept)
+        return out.reshape(-1)[:d].reshape(x.shape)
+
+    return Compressor(
+        name=f"blocktopk_{ratio:g}",
+        compress=compress,
+        bits_per_message=lambda d: 64 * max(1, int(round(ratio * d))),
+        q_bound=lambda x: math.sqrt(max(1.0 - ratio, 0.0)),
+        ratio=ratio,
+    )
+
+
+def make_sign() -> Compressor:
+    def compress(x, rng=None):
+        scale = jnp.mean(jnp.abs(x))            # ||x||_1 / d
+        return scale * jnp.sign(x)
+
+    def q_bound(x):
+        x = jnp.asarray(x, jnp.float32).reshape(-1)
+        l1 = jnp.sum(jnp.abs(x))
+        l2sq = jnp.sum(x * x)
+        d = x.size
+        return float(jnp.sqrt(jnp.maximum(1.0 - l1 * l1 / (d * jnp.maximum(l2sq, 1e-30)), 0.0)))
+
+    return Compressor(
+        name="sign",
+        compress=compress,
+        bits_per_message=lambda d: 32 + d,       # Table 1
+        q_bound=q_bound,
+    )
+
+
+def make_randk(ratio: float) -> Compressor:
+    def compress(x, rng=None):
+        assert rng is not None, "randk needs an rng"
+        flat = x.reshape(-1)
+        k = max(1, int(round(ratio * flat.size)))
+        idx = jax.random.permutation(rng, flat.size)[:k]
+        out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return out.reshape(x.shape)
+
+    return Compressor(
+        name=f"randk_{ratio:g}",
+        compress=compress,
+        bits_per_message=lambda d: 64 * max(1, int(round(ratio * d))),
+        q_bound=lambda x: 1.0,   # only contractive in expectation
+        ratio=ratio,
+    )
+
+
+def make_int8() -> Compressor:
+    def compress(x, rng=None):
+        scale = jnp.max(jnp.abs(x)) / 127.0
+        scale = jnp.maximum(scale, 1e-30)
+        return jnp.round(x / scale) * scale
+
+    return Compressor(
+        name="int8",
+        compress=compress,
+        bits_per_message=lambda d: 32 + 8 * d,
+        q_bound=lambda x: 1.0 / 127.0 * math.sqrt(1.0),  # loose: q <= dmax/127·√d/‖x‖
+    )
+
+
+def make_identity() -> Compressor:
+    return Compressor(
+        name="none",
+        compress=lambda x, rng=None: x,
+        bits_per_message=lambda d: 32 * d,
+        q_bound=lambda x: 0.0,
+    )
+
+
+def make_compressor(name: str, ratio: float = 1 / 64, block: int = 2048) -> Compressor:
+    if name in ("none", "identity"):
+        return make_identity()
+    if name == "topk":
+        return make_topk(ratio)
+    if name == "blocktopk":
+        return make_blocktopk(ratio, block)
+    if name in ("sign", "packedsign"):
+        c = make_sign()
+        if name == "packedsign":
+            # identical numerics; packed int8 wire format (DESIGN.md §3)
+            return Compressor(name="packedsign", compress=c.compress,
+                              bits_per_message=c.bits_per_message,
+                              q_bound=c.q_bound)
+        return c
+    if name == "randk":
+        return make_randk(ratio)
+    if name == "int8":
+        return make_int8()
+    raise ValueError(f"unknown compressor {name!r}")

@@ -1,0 +1,489 @@
+"""The federated round — the paper's Algorithms 1 & 2 — in two executions.
+
+``FedSim``
+    Pure-array simulation: m clients (default 100), vmapped local SGD,
+    *global-vector* compression exactly as the paper evaluates it. Runs on
+    one CPU device; powers the paper-faithful benchmarks and examples.
+
+``build_fed_round``
+    Production mesh execution (shard_map): each index of the client axes IS
+    one client holding a tensor-parallel model replica; FedCAMS compression
+    applies to the client-axis collective (dense psum or the beyond-paper
+    sparse/packed aggregation — DESIGN.md §3). Per-client error-feedback
+    state lives sharded on the client axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.flatten_util import ravel_pytree
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import FedConfig, TrainConfig
+from repro.core.compressors import Compressor, make_compressor
+from repro.core.error_feedback import ef_compress, ef_compress_masked
+from repro.core.sampling import participation_mask
+from repro.core.server_opt import ServerState, init_server_state, server_update
+from repro.models import params as pdefs
+from repro.sharding.rules import ParallelContext
+
+
+# ===========================================================================
+# Simulation path (paper-faithful, single device)
+# ===========================================================================
+
+
+class SimState(NamedTuple):
+    params: object            # pytree
+    opt: ServerState          # over flat vector
+    errors: jax.Array         # (m, d) per-client EF errors
+    server_error: jax.Array   # (d,) server-side EF error (two-way mode)
+    x_client: jax.Array       # (d,) model as clients see it (two-way mode)
+    bits: jax.Array           # cumulative one-way communicated bits
+    round: jax.Array
+
+
+class FedSim:
+    """Federated simulation over an arbitrary ``loss_fn(params, batch)``."""
+
+    def __init__(self, loss_fn: Callable, fed: FedConfig,
+                 compressor: Optional[Compressor] = None):
+        self.loss_fn = loss_fn
+        self.fed = fed
+        if compressor is None and fed.algorithm == "fedcams":
+            compressor = make_compressor(fed.compressor, fed.compress_ratio)
+        self.comp = compressor if fed.algorithm == "fedcams" else None
+        self._round_fn = None
+
+    def init(self, params) -> SimState:
+        flat, self.unravel = ravel_pytree(params)
+        d = flat.size
+        m = self.fed.num_clients
+        return SimState(
+            params=params,
+            opt=init_server_state(flat),
+            errors=jnp.zeros((m, d), jnp.float32),
+            server_error=jnp.zeros((d,), jnp.float32),
+            x_client=flat,
+            bits=jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64
+                           else jnp.float32),
+            round=jnp.zeros((), jnp.int32),
+        )
+
+    # -- one round ---------------------------------------------------------
+    def round(self, state: SimState, client_batches, client_idx, rng):
+        """client_batches: pytree with leading (n, K, ...); client_idx: (n,)."""
+        if self._round_fn is None:
+            self._round_fn = jax.jit(self._round_impl)
+        return self._round_fn(state, client_batches, client_idx, rng)
+
+    def _local_train(self, params, batches):
+        """K local SGD steps for ONE client. batches: (K, ...)."""
+        eta_l = self.fed.eta_l
+
+        def step(p, b):
+            (l, _), g = jax.value_and_grad(self.loss_fn, has_aux=True)(p, b)
+            p = jax.tree.map(lambda x, gg: x - eta_l * gg, p, g)
+            return p, l
+
+        local, losses = lax.scan(step, params, batches)
+        return local, jnp.mean(losses)
+
+    def _round_impl(self, state: SimState, client_batches, client_idx, rng):
+        fed = self.fed
+        n = client_idx.shape[0]
+        start = self.unravel(state.x_client)  # what clients see (== params
+        # unless two-way compression is on)
+
+        local, losses = jax.vmap(lambda b: self._local_train(start, b))(client_batches)
+        flat0, _ = ravel_pytree(start)
+        delta = jax.vmap(lambda p: ravel_pytree(p)[0])(local) - flat0[None, :]
+
+        d = flat0.size
+        gamma = jnp.zeros(())
+        if self.comp is not None:
+            errs = state.errors[client_idx]
+            def one(dd, ee, i):
+                return ef_compress(self.comp, dd, ee,
+                                   jax.random.fold_in(rng, i))
+            hats, new_errs = jax.vmap(one)(delta, errs, jnp.arange(n))
+            errors = state.errors.at[client_idx].set(new_errs)
+            agg = jnp.mean(hats, axis=0)
+            bits = state.bits + n * self.comp.bits_per_message(d)
+            # Assumption 4.17 diagnostic (paper Fig. 6):
+            #   gamma = ||C(mean(Δ+e)) − mean(C(Δ+e))|| / ||mean(Δ)||
+            c_of_mean = self.comp.compress(jnp.mean(delta + errs, axis=0),
+                                           jax.random.fold_in(rng, 999983))
+            gamma = (jnp.linalg.norm(c_of_mean - agg)
+                     / jnp.maximum(jnp.linalg.norm(jnp.mean(delta, axis=0)),
+                                   1e-12))
+        else:
+            errors = state.errors
+            agg = jnp.mean(delta, axis=0)
+            bits = state.bits + n * 32 * d
+
+        # server update on the flat vector
+        xflat, _ = ravel_pytree(state.params)
+        new_flat, opt = server_update(fed, state.opt, xflat, agg)
+
+        # beyond-paper: two-way (server->client) EF compression, appendix D
+        if fed.two_way and self.comp is not None:
+            upd = new_flat - state.x_client
+            tot = upd + state.server_error
+            hat = self.comp.compress(tot, jax.random.fold_in(rng, 10**6))
+            server_error = tot - hat
+            x_client = state.x_client + hat
+        else:
+            server_error = state.server_error
+            x_client = new_flat
+
+        new_params = self.unravel(new_flat)
+        new_state = SimState(new_params, opt, errors, server_error, x_client,
+                             bits, state.round + 1)
+        return new_state, {"loss": jnp.mean(losses), "bits": bits,
+                           "gamma": gamma}
+
+
+# ===========================================================================
+# Mesh path (production)
+# ===========================================================================
+
+
+class FedMeshState(NamedTuple):
+    params: object     # pytree, TP-sharded
+    m: object          # server momentum    (fp32, like params)
+    v: object          # server variance
+    vhat: object       # max-stabilized variance
+    errors: object     # per-client EF errors: leading client dim
+    round: jax.Array
+
+
+def client_batch_axes(fed: FedConfig) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    axes = tuple(fed.client_axes)
+    if "data" not in axes:
+        axes = axes + ("data",)
+    return axes
+
+
+def state_shard_axes(fed: FedConfig):
+    """Mesh axes the server state shards over (ZeRO mode)."""
+    return tuple(fed.client_axes) if fed.client_axes else ("data",)
+
+
+def state_shard_dim(dref: pdefs.ParamDef, shards: int):
+    """First dim of a leaf that can host the server-state shard, or None."""
+    if shards <= 1:
+        return None
+    for i, (size, sp) in enumerate(zip(dref.shape, dref.spec)):
+        if sp is None and size % shards == 0 and size >= shards:
+            return i
+    return None
+
+
+def fed_state_defs(model, fed: FedConfig):
+    """ParamDef tree for the full federated state (GLOBAL shapes)."""
+    par = model.defs()
+
+    def fp32(dref: pdefs.ParamDef) -> pdefs.ParamDef:
+        import dataclasses
+        return dataclasses.replace(dref, dtype="float32")
+
+    def opt_leaf(dref: pdefs.ParamDef) -> pdefs.ParamDef:
+        import dataclasses
+        dref = fp32(dref)
+        if fed.shard_server_state:
+            sd = state_shard_dim(dref, fed.state_shards)
+            if sd is not None:
+                axes = state_shard_axes(fed)
+                spec = list(dref.spec)
+                spec[sd] = axes[0] if len(axes) == 1 else tuple(axes)
+                dref = dataclasses.replace(dref, spec=P(*spec))
+        return dref
+
+    def client_stacked(dref: pdefs.ParamDef) -> pdefs.ParamDef:
+        import dataclasses
+        if not fed.client_axes:
+            ax = None
+        elif len(fed.client_axes) == 1:
+            ax = fed.client_axes[0]
+        else:
+            ax = tuple(fed.client_axes)
+        return dataclasses.replace(
+            dref, shape=(fed.num_clients,) + tuple(dref.shape),
+            spec=P(ax, *dref.spec), dtype="float32")
+
+    opt = jax.tree.map(opt_leaf, par, is_leaf=pdefs.is_def)
+    errors = jax.tree.map(client_stacked, par, is_leaf=pdefs.is_def)
+    return FedMeshState(
+        params=par, m=opt, v=opt, vhat=opt, errors=errors,
+        round=pdefs.ParamDef((), P(), dtype="int32", init="zeros"))
+
+
+def init_fed_state(model, fed: FedConfig, rng) -> FedMeshState:
+    defs = fed_state_defs(model, fed)
+    params = pdefs.init_params(defs.params, rng)
+    zeros = lambda t: jax.tree.map(
+        lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), t, is_leaf=pdefs.is_def)
+    return FedMeshState(params=params, m=zeros(defs.m), v=zeros(defs.v),
+                        vhat=zeros(defs.vhat), errors=zeros(defs.errors),
+                        round=jnp.zeros((), jnp.int32))
+
+
+# -- aggregation strategies --------------------------------------------------
+
+
+def _agg_dense(hat_tree, my_mask, n_eff, ctx: ParallelContext,
+               wire_dtype: str = "float32"):
+    """Paper-faithful: dense psum over the client axes. ``wire_dtype``
+    narrows the collective payload (bf16 halves client-axis bytes; the
+    caller keeps error feedback exact by tracking the narrowed value)."""
+    wd = jnp.dtype(wire_dtype)
+    contrib = jax.tree.map(
+        lambda h: jnp.where(my_mask > 0, h, 0.0).astype(wd), hat_tree)
+    return jax.tree.map(
+        lambda c: ctx.psum_clients(c).astype(jnp.float32) / n_eff, contrib)
+
+
+def _sparse_topk_leaf(tot, ratio, my_mask, n_eff, ctx: ParallelContext,
+                      block: int = 2048):
+    """Beyond-paper: all_gather (values, indices) of the local blockwise
+    top-k and scatter-add — the wire carries ~2k words instead of d, and the
+    selection is bit-identical to the dense blocktopk path (same
+    ``block_layout``). Returns (aggregated dense leaf, this client's dense
+    hat for error feedback)."""
+    from repro.core.compressors import block_layout
+    flat = tot.reshape(-1)
+    d = flat.size
+    bs, nb = block_layout(d, block)
+    pad = nb * bs - d
+    xb = jnp.pad(flat, (0, pad)).reshape(nb, bs)
+    k = max(1, int(round(ratio * bs)))
+    _, idx = lax.top_k(jnp.abs(xb), k)                       # (nb, k)
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    gidx = (idx + (jnp.arange(nb) * bs)[:, None]).reshape(-1)
+    kept = vals.reshape(-1)
+    hat = jnp.zeros(nb * bs, flat.dtype).at[gidx].set(kept)[:d]
+    masked = kept * (my_mask > 0)
+    g_vals = ctx.all_gather_clients(masked[None], axis=0).reshape(-1)
+    g_idx = ctx.all_gather_clients(gidx[None], axis=0).reshape(-1)
+    # NB: fresh zeros (replicated vma) — zeros_like(varying) would taint the
+    # aggregate as client-varying.
+    zeros = jnp.zeros(nb * bs, flat.dtype)
+    agg = (zeros.at[g_idx].add(g_vals) / n_eff)[:d]
+    return agg.reshape(tot.shape), hat.reshape(tot.shape)
+
+
+def _packed_sign_leaf(tot, my_mask, n_eff, ctx: ParallelContext):
+    """Beyond-paper: scaled-sign with the sign bits packed 8->1 in uint8 for
+    the client-axis all_gather (1 bit/coordinate on the wire)."""
+    flat = tot.reshape(-1)
+    d = flat.size
+    scale = jnp.mean(jnp.abs(flat)) * (my_mask > 0)
+    bits = jnp.packbits((flat >= 0).astype(jnp.uint8))
+    g_bits = ctx.all_gather_clients(bits[None], axis=0)      # (m, d/8)
+    g_scale = ctx.all_gather_clients(scale[None], axis=0)    # (m,)
+    signs = jnp.unpackbits(g_bits, axis=1)[:, :d].astype(jnp.float32) * 2.0 - 1.0
+    agg = (g_scale[:, None] * signs).sum(0) / n_eff
+    hat = jnp.mean(jnp.abs(flat)) * jnp.sign(flat)
+    return agg.reshape(tot.shape), hat.reshape(tot.shape)
+
+
+def _sharded_server_update(fed: FedConfig, st: ServerState, params, agg,
+                           model, ctx: ParallelContext):
+    """ZeRO-style server step: each index along the state-shard axes owns a
+    slice of (m, v, v̂); it updates its slice of x from its slice of the
+    aggregate and the refreshed params are all-gathered back (invariant vma).
+    Leaves too small to shard stay replicated and update normally."""
+    axes = state_shard_axes(fed)
+    shards = fed.state_shards
+    # linear index along the shard axes
+    idx = 0
+    for ax in axes:
+        idx = idx * lax.psum(1, ax) + lax.axis_index(ax)
+
+    defs = model.defs()
+    dims = jax.tree.map(lambda d: state_shard_dim(d, shards), defs,
+                        is_leaf=pdefs.is_def)
+
+    def take(leaf, sd):
+        if sd is None:
+            return leaf
+        chunk = leaf.shape[sd] // shards
+        return lax.dynamic_slice_in_dim(leaf, idx * chunk, chunk, axis=sd)
+
+    p_sh = jax.tree.map(take, params, dims)
+    agg_sh = jax.tree.map(take, agg, dims)
+    st_sh = ServerState(m=st.m, v=st.v, vhat=st.vhat, t=st.t)  # already shards
+    newp_sh, new_st = server_update(fed, st_sh, p_sh, agg_sh)
+
+    def gather(newp, oldp, sd):
+        if sd is None:
+            return newp
+        from repro.sharding.rules import ParallelContext as _PC
+        x = newp
+        for ax in axes:
+            try:
+                from jax._src.lax.parallel import all_gather_invariant
+                x = all_gather_invariant(x, ax, axis=sd, tiled=True)
+            except ImportError:  # pragma: no cover
+                x = lax.all_gather(x, ax, axis=sd, tiled=True)
+        return x.astype(oldp.dtype)
+
+    new_params = jax.tree.map(gather, newp_sh, params, dims)
+    return new_params, new_st
+
+
+# -- the round ---------------------------------------------------------------
+
+
+def build_fed_round(model, fed: FedConfig, train: TrainConfig,
+                    ctx: ParallelContext, *, chunk: int = 2048,
+                    kernel_impl: Optional[object] = None):
+    """Returns fed_round(state, batch, seed) — the per-device SPMD function
+    (wrap in shard_map + jit via launch.train / launch.dryrun)."""
+    # On the mesh, deltas are per-leaf shards (billions of elements for the
+    # large archs): global top-k is ill-defined and lax.top_k overflows int32
+    # indices, so "topk" means the blockwise TPU kernel semantics here
+    # (DESIGN.md §3; contraction bound unchanged). Exact global top-k lives
+    # in the FedSim simulation path.
+    comp_name = "blocktopk" if fed.compressor == "topk" else fed.compressor
+    comp = (make_compressor(comp_name, fed.compress_ratio)
+            if fed.algorithm == "fedcams" else None)
+    m_clients = fed.num_clients
+    n_part = fed.participating or m_clients
+    hierarchical = "data" not in fed.client_axes  # within-client DP on "data"
+
+    def local_loss(p, b):
+        return model.loss(p, b, ctx, remat_policy=train.remat_policy,
+                          chunk=chunk)
+
+    # TP gradient correctness relies on shard_map's varying-manual-axes
+    # tracking (check_vma=True at every launch-site shard_map): jax then
+    # transposes the forward psums correctly, so gradients of both sharded
+    # and replicated parameters are exact — verified against the tp=1 model
+    # in tests/test_sharding.py.
+
+    def fed_round(state: FedMeshState, batch, seed):
+        params = state.params
+
+        # Clients must diverge during local training: mark the replicated
+        # global params as VARYING over the client axes (lax.pvary — a
+        # vma-type cast, no communication) so shard_map's vma autodiff does
+        # NOT sum gradients across clients. In hierarchical mode the "data"
+        # axis stays replicated, so the automatic gradient psum over "data"
+        # implements within-client data parallelism (we rescale sum->mean).
+        def _pvary(t):
+            if not fed.client_axes:
+                return t
+            return jax.tree.map(
+                lambda x: lax.pvary(x, tuple(fed.client_axes)), t)
+
+        local0 = _pvary(params)
+
+        def step(p, b):
+            (l, _), g = jax.value_and_grad(local_loss, has_aux=True)(p, b)
+            if hierarchical:
+                g = jax.tree.map(lambda x: x / ctx.dp, g)
+            p = jax.tree.map(lambda x, gg: x - fed.eta_l * gg.astype(x.dtype),
+                             p, g)
+            return p, l
+
+        local, losses = lax.scan(step, local0, batch)
+        delta = jax.tree.map(lambda a, b_: (a - b_).astype(jnp.float32),
+                             local, local0)
+
+        # participation (shared randomness -> identical mask on every device)
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        mask = participation_mask(jax.random.fold_in(rng, 1), m_clients, n_part)
+        my_mask = mask[ctx.client_index()]
+        n_eff = float(n_part)
+
+        my_err = jax.tree.map(lambda e: e[0], state.errors)  # local client slice
+        if comp is not None:
+            if fed.aggregation == "sparse" and fed.compressor in ("topk", "blocktopk"):
+                tot = jax.tree.map(lambda dd, ee: dd + ee, delta, my_err)
+                pairs = jax.tree.map(
+                    lambda t: _sparse_topk_leaf(t, fed.compress_ratio, my_mask,
+                                                n_eff, ctx), tot)
+                agg = jax.tree.map(lambda pr: pr[0], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+                hat = jax.tree.map(lambda pr: pr[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+                new_err = jax.tree.map(
+                    lambda t, h, eo: jnp.where(my_mask > 0, t - h, eo),
+                    tot, hat, my_err)
+            elif fed.aggregation == "sparse" and fed.compressor == "packedsign":
+                tot = jax.tree.map(lambda dd, ee: dd + ee, delta, my_err)
+                pairs = jax.tree.map(
+                    lambda t: _packed_sign_leaf(t, my_mask, n_eff, ctx), tot)
+                agg = jax.tree.map(lambda pr: pr[0], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+                hat = jax.tree.map(lambda pr: pr[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+                new_err = jax.tree.map(
+                    lambda t, h, eo: jnp.where(my_mask > 0, t - h, eo),
+                    tot, hat, my_err)
+            else:
+                if kernel_impl is not None:
+                    hat, new_err = kernel_impl.ef_compress_tree(
+                        comp, delta, my_err, my_mask)
+                else:
+                    hat, new_err = ef_compress_masked(
+                        comp, delta, my_err, my_mask,
+                        jax.random.fold_in(rng, 2))
+                if fed.delta_dtype != "float32":
+                    # error feedback must track the value actually sent
+                    wd = jnp.dtype(fed.delta_dtype)
+                    hat_tx = jax.tree.map(
+                        lambda h: h.astype(wd).astype(jnp.float32), hat)
+                    new_err = jax.tree.map(
+                        lambda d, e, h: jnp.where(my_mask > 0, d + e - h, e),
+                        delta, my_err, hat_tx)
+                    hat = hat_tx
+                agg = _agg_dense(hat, my_mask, n_eff, ctx, fed.delta_dtype)
+        else:
+            new_err = my_err
+            agg = _agg_dense(delta, my_mask, n_eff, ctx, fed.delta_dtype)
+
+        # server update (replicated elementwise math on sharded leaves)
+        st = ServerState(m=state.m, v=state.v, vhat=state.vhat, t=state.round)
+        if kernel_impl is not None and fed.algorithm in ("fedams", "fedcams"):
+            new_params, new_st = kernel_impl.fedams_update_tree(fed, st, params, agg)
+        elif fed.shard_server_state and fed.state_shards > 1:
+            new_params, new_st = _sharded_server_update(fed, st, params, agg,
+                                                        model, ctx)
+        else:
+            new_params, new_st = server_update(fed, st, params, agg)
+
+        errors = jax.tree.map(lambda e, ne: e.at[0].set(ne),
+                              state.errors, new_err)
+        loss = ctx.pmean_clients(jnp.mean(losses))
+        if hierarchical:
+            loss = ctx.pmean_data(loss)
+        new_state = FedMeshState(params=new_params, m=new_st.m, v=new_st.v,
+                                 vhat=new_st.vhat, errors=errors,
+                                 round=new_st.t)
+        return new_state, {"loss": loss}
+
+    return fed_round
+
+
+def fed_batch_defs(model, fed: FedConfig, train: TrainConfig):
+    """GLOBAL batch defs with client-axis sharding, leading K dim."""
+    b = model.train_batch_defs(train.global_batch, train.seq_len)
+    axes = client_batch_axes(fed)
+    ax = axes[0] if len(axes) == 1 else tuple(axes)
+
+    def stack_k(d: pdefs.ParamDef):
+        import dataclasses
+        spec = list(d.spec)
+        spec[0] = ax  # batch dim over client (+data) axes
+        return dataclasses.replace(
+            d, shape=(fed.local_steps,) + tuple(d.shape), spec=P(None, *spec))
+
+    return jax.tree.map(stack_k, b, is_leaf=pdefs.is_def)

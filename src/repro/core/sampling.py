@@ -1,0 +1,35 @@
+"""Client sampling (paper §3.2: random without replacement, P{i∈S_t}=n/m).
+
+SPMD-friendly: from a shared per-round rng every client derives the same
+permutation of [0, m) and checks whether its own index lands in the first n
+slots. Weighted sampling uses Gumbel top-n over log-weights."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_clients(rng, m: int, n: int):
+    """Returns int32 indices (n,) of the participating clients."""
+    if n <= 0 or n >= m:
+        return jnp.arange(m, dtype=jnp.int32)
+    return jax.random.permutation(rng, m)[:n].astype(jnp.int32)
+
+
+def participation_mask(rng, m: int, n: int):
+    """(m,) float mask: 1.0 for sampled clients. Full participation if n in
+    {0, m}."""
+    if n <= 0 or n >= m:
+        return jnp.ones((m,), jnp.float32)
+    idx = sample_clients(rng, m, n)
+    return jnp.zeros((m,), jnp.float32).at[idx].set(1.0)
+
+
+def weighted_participation_mask(rng, weights, n: int):
+    """Gumbel top-n sampling without replacement with probability ∝ weights."""
+    m = weights.shape[0]
+    if n <= 0 or n >= m:
+        return jnp.ones((m,), jnp.float32)
+    g = jax.random.gumbel(rng, (m,)) + jnp.log(jnp.maximum(weights, 1e-30))
+    _, idx = jax.lax.top_k(g, n)
+    return jnp.zeros((m,), jnp.float32).at[idx].set(1.0)

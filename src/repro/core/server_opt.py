@@ -1,0 +1,90 @@
+"""Server-side optimizers: the paper's FedAMS family plus all baselines.
+
+The server treats the aggregated client delta Δ̂_t as a pseudo-gradient
+(paper eq. 3.2-3.4) and performs one adaptive step. Note the *sign*: the
+global update is  x ← x + η·m/√v̂  (deltas already point downhill).
+
+    fedavg     : x += η Δ
+    fedadagrad : v += Δ²                                   (Reddi et al. 2020)
+    fedadam    : Adam(m, v)                                (Reddi et al. 2020)
+    fedyogi    : Yogi variance update                      (Reddi et al. 2020)
+    fedamsgrad : Option 2 — v̂=max(v̂,v),  x += η m/(√v̂+ε)  (Tong et al. 2020)
+    fedams     : Option 1 — v̂=max(v̂,v,ε), x += η m/√v̂     (this paper)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+
+
+class ServerState(NamedTuple):
+    m: object       # momentum pytree (zeros for fedavg)
+    v: object       # second moment
+    vhat: object    # max-stabilized second moment
+    t: jax.Array    # round counter
+
+
+def init_server_state(params) -> ServerState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return ServerState(m=z, v=z, vhat=z, t=jnp.zeros((), jnp.int32))
+
+
+def server_update(fed: FedConfig, state: ServerState, params, delta):
+    """One server step. Returns (new_params, new_state)."""
+    algo, b1, b2, eta, eps = fed.algorithm, fed.beta1, fed.beta2, fed.eta, fed.eps
+    t = state.t + 1
+
+    if algo == "fedavg":
+        new_params = jax.tree.map(
+            lambda x, d: x + eta * d.astype(x.dtype), params, delta)
+        return new_params, ServerState(state.m, state.v, state.vhat, t)
+
+    m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d.astype(jnp.float32),
+                     state.m, delta)
+
+    if algo == "fedyogi":
+        def vup(vv, d):
+            d2 = jnp.square(d.astype(jnp.float32))
+            return vv - (1 - b2) * d2 * jnp.sign(vv - d2)
+        v = jax.tree.map(vup, state.v, delta)
+    elif algo == "fedadagrad":
+        v = jax.tree.map(
+            lambda vv, d: vv + jnp.square(d.astype(jnp.float32)),
+            state.v, delta)
+    else:
+        v = jax.tree.map(
+            lambda vv, d: b2 * vv + (1 - b2) * jnp.square(d.astype(jnp.float32)),
+            state.v, delta)
+
+    if algo in ("fedadam", "fedyogi", "fedadagrad"):
+        vhat = state.vhat  # unused
+        new_params = jax.tree.map(
+            lambda x, mm, vv: x + (eta * mm / (jnp.sqrt(vv) + eps)).astype(x.dtype),
+            params, m, v)
+    elif algo == "fedamsgrad":                       # Option 2
+        vhat = jax.tree.map(jnp.maximum, state.vhat, v)
+        new_params = jax.tree.map(
+            lambda x, mm, vh: x + (eta * mm / (jnp.sqrt(vh) + eps)).astype(x.dtype),
+            params, m, vhat)
+    elif algo in ("fedams", "fedcams"):
+        if fed.option == 1:                          # Option 1 (max stabilization)
+            vhat = jax.tree.map(
+                lambda vh, vv: jnp.maximum(jnp.maximum(vh, vv), eps),
+                state.vhat, v)
+            new_params = jax.tree.map(
+                lambda x, mm, vh: x + (eta * mm / jnp.sqrt(vh)).astype(x.dtype),
+                params, m, vhat)
+        else:                                        # Option 2
+            vhat = jax.tree.map(jnp.maximum, state.vhat, v)
+            new_params = jax.tree.map(
+                lambda x, mm, vh: x + (eta * mm / (jnp.sqrt(vh) + eps)).astype(x.dtype),
+                params, m, vhat)
+    else:
+        raise ValueError(f"unknown algorithm {algo!r}")
+
+    return new_params, ServerState(m, v, vhat, t)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots: the compression
+path (blockwise top-k / scaled-sign, fused with error feedback) and the
+fused FedAMS server update. Validated in interpret mode against ref.py."""
+from repro.kernels.fedams_update import fedams_update  # noqa: F401
+from repro.kernels.ops import KernelImpl  # noqa: F401
+from repro.kernels.sign_ef import sign_ef  # noqa: F401
+from repro.kernels.topk_ef import topk_ef  # noqa: F401

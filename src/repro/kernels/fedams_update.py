@@ -1,0 +1,61 @@
+"""Fused FedAMS server update as a Pallas TPU kernel.
+
+One HBM pass over five operand streams (x, m, v, v̂, Δ̂) producing four
+outputs — the unfused jnp version reads/writes each array separately (9+
+passes). The update is purely elementwise so it tiles trivially: 1-D blocks
+sized to keep 9 fp32 streams resident in VMEM.
+
+Implements both paper options:
+  option 1:  v̂ = max(v̂, v, ε);  x += η·m/√v̂
+  option 2:  v̂ = max(v̂, v);     x += η·m/(√v̂+ε)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _fedams_kernel(x_ref, m_ref, v_ref, vh_ref, d_ref,
+                   x_out, m_out, v_out, vh_out, *,
+                   eta: float, beta1: float, beta2: float, eps: float,
+                   option: int):
+    d = d_ref[...]
+    m2 = beta1 * m_ref[...] + (1.0 - beta1) * d
+    v2 = beta2 * v_ref[...] + (1.0 - beta2) * d * d
+    if option == 1:
+        vh2 = jnp.maximum(jnp.maximum(vh_ref[...], v2), eps)
+        x2 = x_ref[...] + eta * m2 * jax.lax.rsqrt(vh2)
+    else:
+        vh2 = jnp.maximum(vh_ref[...], v2)
+        x2 = x_ref[...] + eta * m2 / (jnp.sqrt(vh2) + eps)
+    x_out[...] = x2
+    m_out[...] = m2
+    v_out[...] = v2
+    vh_out[...] = vh2
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "beta1", "beta2", "eps",
+                                             "option", "block", "interpret"))
+def fedams_update(x, m, v, vhat, delta, *, eta: float, beta1: float,
+                  beta2: float, eps: float, option: int = 1,
+                  block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """All inputs (N,) fp32, N % block == 0. Returns (x, m, v, vhat)."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = tuple(jax.ShapeDtypeStruct(x.shape, x.dtype) for _ in range(4))
+    return pl.pallas_call(
+        functools.partial(_fedams_kernel, eta=eta, beta1=beta1, beta2=beta2,
+                          eps=eps, option=option),
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, m, v, vhat, delta)

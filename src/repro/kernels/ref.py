@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+Semantics notes:
+  * ``topk_ef_ref`` is *threshold* top-k within each block: every element with
+    |x| >= (k-th largest |x| in its block) is kept. With ties this keeps more
+    than k elements — both kernel and oracle implement the same rule, and the
+    contraction bound q = sqrt(1-k/B) only improves when extra elements are
+    kept. (The exact-k scatter variant lives in core.compressors for the
+    paper-faithful simulation.)
+  * ``sign_ef_ref``: scaled sign with the *global* l1 scale (computed outside
+    the kernel in one reduction pass) and fused error feedback.
+  * ``fedams_update_ref``: the fused server update, Options 1 and 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def topk_ef_ref(x, err, k: int, block: int):
+    """x, err: (N,) with N % block == 0. Returns (hat, new_err)."""
+    tot = (x + err).reshape(-1, block)
+    absx = jnp.abs(tot)
+    kth = lax.top_k(absx, k)[0][:, -1]
+    keep = absx >= kth[:, None]
+    hat = jnp.where(keep, tot, 0.0)
+    new_err = tot - hat
+    return hat.reshape(-1), new_err.reshape(-1)
+
+
+def sign_ef_ref(x, err):
+    """x, err: (N,). Returns (hat, new_err). Scale = mean |x+err| (global)."""
+    tot = x + err
+    scale = jnp.mean(jnp.abs(tot))
+    hat = scale * jnp.sign(tot)
+    return hat, tot - hat
+
+
+def fedams_update_ref(x, m, v, vhat, delta, *, eta: float, beta1: float,
+                      beta2: float, eps: float, option: int = 1):
+    """Fused FedAMS server update on flat fp32 vectors."""
+    m2 = beta1 * m + (1 - beta1) * delta
+    v2 = beta2 * v + (1 - beta2) * delta * delta
+    if option == 1:
+        vh2 = jnp.maximum(jnp.maximum(vhat, v2), eps)
+        x2 = x + eta * m2 / jnp.sqrt(vh2)
+    else:
+        vh2 = jnp.maximum(vhat, v2)
+        x2 = x + eta * m2 / (jnp.sqrt(vh2) + eps)
+    return x2, m2, v2, vh2

@@ -1,0 +1,63 @@
+"""Scaled-sign + fused error feedback as a Pallas TPU kernel.
+
+Two-pass structure (the scale  ‖x+e‖₁/d  is a global reduction):
+  pass 1: blockwise |·| partial sums (kernel below, accumulated in fp32);
+  pass 2: elementwise  hat = scale·sign(x+e),  err = (x+e) − hat,
+          with the scalar scale broadcast to every tile.
+
+On TPU the sign bits would additionally be packed 8→1 into int8 lanes for
+the wire (see core.rounds._packed_sign_leaf for the collective side); the
+kernel emits the dense hat used by the local error-feedback update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+
+
+def _l1_partial_kernel(x_ref, e_ref, out_ref):
+    out_ref[...] = jnp.sum(jnp.abs(x_ref[...] + e_ref[...]))[None]
+
+
+def _sign_ef_kernel(scale_ref, x_ref, e_ref, hat_ref, err_ref):
+    tot = x_ref[...] + e_ref[...]
+    scale = scale_ref[0]
+    hat = scale * jnp.sign(tot)
+    hat_ref[...] = hat
+    err_ref[...] = tot - hat
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sign_ef(x, err, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """x, err: (N,) fp32 with N % block == 0. Returns (hat, new_err)."""
+    assert x.ndim == 1 and x.shape == err.shape
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+
+    partials = pl.pallas_call(
+        _l1_partial_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), x.dtype),
+        interpret=interpret,
+    )(x, err)
+    scale = (jnp.sum(partials) / n).reshape(1)
+
+    out_shape = (jax.ShapeDtypeStruct(x.shape, x.dtype),
+                 jax.ShapeDtypeStruct(x.shape, x.dtype))
+    return pl.pallas_call(
+        _sign_ef_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scale, x, err)

@@ -1,0 +1,311 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — a
+layer stack scanned over 61 groups would under-report FLOPs by 61x. This
+module parses the compiled HLO text into its computation graph, costs each
+computation (dot FLOPs from operand shapes, output-buffer bytes, collective
+payload bytes by kind) and resolves the call graph with while-loop
+``known_trip_count`` multipliers.
+
+Conventions (held fixed so §Perf deltas are comparable):
+  * FLOPs: 2 · prod(out_shape) · prod(contracted lhs dims) per dot;
+    non-dot elementwise FLOPs are ignored (sub-percent for transformers).
+  * Bytes (HBM traffic proxy):
+      - dot: lhs + rhs + output bytes (weight/cache READS are the real
+        bottleneck for decode);
+      - dynamic-update-slice: the UPDATE operand bytes (XLA aliases the
+        target in place — in-loop cache/stack writes cost the slice, not
+        the whole buffer);
+      - reduce: first-operand + output bytes;
+      - other scheduled ops: output bytes (fusion bodies excluded — their
+        intermediates stay in registers/VMEM; the fusion's own output
+        buffer is counted at the call site).
+  * Collectives: payload = output bytes (tuple outputs summed), multiplied
+    by loop trip counts like everything else.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_BUF_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"?(\d+)"?')
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+def _shape_elems(shape_str: str) -> int:
+    if not shape_str:
+        return 1
+    n = 1
+    for s in shape_str.split(","):
+        n *= int(s)
+    return n
+
+
+def _buf_bytes(dtype: str, shape_str: str) -> int:
+    return _shape_elems(shape_str) * _DTYPE_BYTES.get(dtype, 0)
+
+
+@dataclass
+class Call:
+    callee: str
+    kind: str            # fusion | call | while_body | while_cond | branch
+    trip: int = 1
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    calls: List[Call] = field(default_factory=list)
+    fused: bool = False   # referenced via calls= (bytes not scheduled)
+    # if the computation ROOT is (a tuple of) dynamic-update-slice, the
+    # fusion output is aliased in place: the caller should charge the
+    # update-slice bytes, not the whole buffer.
+    out_alias_bytes: Optional[float] = None
+
+
+@dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    coll_bytes: Dict[str, float]
+    coll_count: Dict[str, int]
+
+    @property
+    def weighted_coll_bytes(self) -> float:
+        return sum(b * (2.0 if k == "all-reduce" else 1.0)
+                   for k, b in self.coll_bytes.items())
+
+
+def _parse_out_bufs(rhs: str) -> Tuple[List[Tuple[str, str]], str]:
+    """rhs = everything after '='. Returns (output buffers, remainder)."""
+    # output is either `type[shape]{layout} opcode(...)` or a tuple
+    # `(type[shape]{..}, type[shape]{..}) opcode(...)`.
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        out_part, rest = rhs[:i + 1], rhs[i + 1:]
+    else:
+        m = re.match(r"^[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?(?::\w+\(\d+\))?\s*", rhs)
+        if not m:
+            return [], rhs
+        out_part, rest = m.group(0), rhs[m.end():]
+    return _BUF_RE.findall(out_part), rest.strip()
+
+
+def parse_hlo(text: str) -> Dict[str, CompCost]:
+    comps: Dict[str, CompCost] = {}
+    cur: Optional[str] = None
+    symtab: Dict[str, List[Tuple[str, str]]] = {}
+    entry = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.endswith("{") and "->" in line:
+                cur = m.group(2)
+                comps[cur] = CompCost()
+                symtab = {}
+                dus_bytes = {}
+                small_ops = {}
+                if m.group(1):
+                    entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(2), m.group(3)
+        if name not in dus_bytes:
+            pass
+        bufs, rest = _parse_out_bufs(rhs)
+        symtab[name] = bufs
+        opm = re.match(r"^([\w\-]+)\(", rest)
+        if not opm:
+            continue
+        op = opm.group(1)
+        cc = comps[cur]
+        out_bytes = sum(_buf_bytes(d, s) for d, s in bufs)
+
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES:
+            payload = out_bytes
+            if base_op == "reduce-scatter":
+                # per-device traffic ~= the full (pre-scatter) input
+                args = re.findall(r"%([\w\.\-]+)",
+                                  rest[rest.find("(") + 1:rest.find(")")])
+                first = symtab.get(args[0]) if args else None
+                if first:
+                    payload = sum(_buf_bytes(d, s) for d, s in first)
+            cc.coll[base_op] = cc.coll.get(base_op, 0.0) + payload
+            cc.coll_count[base_op] = cc.coll_count.get(base_op, 0) + 1
+            cc.bytes += out_bytes
+            continue
+        if op.endswith("-done"):
+            continue
+
+        if op == "tuple":
+            if m.group(1):  # ROOT tuple: alias if every element is a dus
+                args = re.findall(r"%([\w\.\-]+)",
+                                  rest[len(op) + 1:rest.find(")")])
+                if args and all(a in dus_bytes or a in small_ops
+                                for a in args):
+                    cc.out_alias_bytes = sum(
+                        dus_bytes.get(a, small_ops.get(a, 0.0))
+                        for a in args)
+            continue
+        if op in ("parameter", "constant", "get-tuple-element",
+                  "bitcast", "after-all"):
+            continue
+
+        if op == "dot":
+            # operand shapes via the symbol table
+            args = re.findall(r"%([\w\.\-]+)", rest[len(op) + 1:rest.find(")")])
+            lhs_shape = None
+            operand_bytes = 0
+            for ai, a in enumerate(args[:2]):
+                b2 = symtab.get(a)
+                if b2:
+                    operand_bytes += sum(_buf_bytes(d, s) for d, s in b2)
+                    if ai == 0:
+                        lhs_shape = b2[0][1]
+            cdims = _DIMS_RE.search(rest)
+            contracted = 1
+            if lhs_shape and cdims:
+                dims = [int(x) for x in cdims.group(1).split(",") if x]
+                sizes = [int(x) for x in lhs_shape.split(",") if x]
+                for dim in dims:
+                    if dim < len(sizes):
+                        contracted *= sizes[dim]
+            out_elems = sum(_shape_elems(s) for _, s in bufs)
+            cc.flops += 2.0 * out_elems * contracted
+            cc.bytes += out_bytes + operand_bytes
+            continue
+
+        if op == "dynamic-update-slice":
+            # in-place aliased write: traffic = the update slice (operand 1)
+            args = re.findall(r"%([\w\.\-]+)",
+                              rest[len(op) + 1:rest.find(")")])
+            upd = symtab.get(args[1]) if len(args) > 1 else None
+            ub = sum(_buf_bytes(d, s) for d, s in upd) if upd else 0
+            dus_bytes[name] = ub
+            cc.bytes += ub
+            if m.group(1):  # ROOT dus => fusion output aliased
+                cc.out_alias_bytes = ub
+            continue
+
+        if op == "reduce":
+            args = re.findall(r"%([\w\.\-]+)",
+                              rest[len(op) + 1:rest.find(")")])
+            first = symtab.get(args[0]) if args else None
+            if first:
+                cc.bytes += sum(_buf_bytes(d, s) for d, s in first)
+            cc.bytes += out_bytes
+            continue
+
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            cm = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if bm:
+                cc.calls.append(Call(bm.group(1), "while_body", trip))
+            if cm:
+                cc.calls.append(Call(cm.group(1), "while_cond", trip))
+            continue
+
+        if op in ("fusion", "custom-call", "call", "async-start"):
+            fm = re.search(r"(?:calls|to_apply|called_computation)=%?([\w\.\-]+)",
+                           rest)
+            alias = None
+            if fm:
+                callee = comps.setdefault(fm.group(1), CompCost())
+                cc.calls.append(Call(fm.group(1), "fusion", 1))
+                alias = callee.out_alias_bytes
+            cc.bytes += out_bytes if alias is None else alias
+            continue
+
+        if op == "conditional":
+            for br in re.findall(r"%([\w\.\-]+)",
+                                 rest[rest.find("branch_computations"):]) or []:
+                cc.calls.append(Call(br, "branch", 1))
+            cc.bytes += out_bytes
+            continue
+
+        # reduce/sort/map to_apply bodies are scalar lambdas — skip linking
+        if out_bytes <= 4096:
+            small_ops[name] = float(out_bytes)
+        cc.bytes += out_bytes
+
+    # mark fused computations (their own bytes are not scheduled memory)
+    for c in comps.values():
+        for call in c.calls:
+            if call.kind == "fusion" and call.callee in comps:
+                comps[call.callee].fused = True
+
+    comps["__entry__"] = comps.get(entry, CompCost()) if entry else CompCost()
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def resolve_cost(comps: Dict[str, CompCost]) -> HloCost:
+    entry = comps.get("__entry_name__")
+    memo: Dict[str, Tuple[float, float, Dict[str, float], Dict[str, int]]] = {}
+
+    def visit(name: str, stack=()) -> Tuple[float, float, Dict[str, float], Dict[str, int]]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps or name.startswith("__"):
+            return 0.0, 0.0, {}, {}
+        c = comps[name]
+        flops = c.flops
+        byts = 0.0 if c.fused else c.bytes
+        coll = dict(c.coll)
+        cnt = dict(c.coll_count)
+        for call in c.calls:
+            f, b, co, cn = visit(call.callee, stack + (name,))
+            mult = call.trip
+            flops += f * mult
+            byts += b * mult
+            for k, v in co.items():
+                coll[k] = coll.get(k, 0.0) + v * mult
+            for k, v in cn.items():
+                cnt[k] = cnt.get(k, 0) + v * mult
+        memo[name] = (flops, byts, coll, cnt)
+        return memo[name]
+
+    if not isinstance(entry, str):
+        return HloCost(0.0, 0.0, {}, {})
+    f, b, co, cn = visit(entry)
+    return HloCost(flops=f, bytes=b, coll_bytes=co, coll_count=cn)
+
+
+def analyze(text: str) -> HloCost:
+    return resolve_cost(parse_hlo(text))

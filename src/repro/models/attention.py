@@ -1,0 +1,273 @@
+"""Softmax attention: GQA/MQA/MHA, sliding windows, softcaps, KV caches.
+
+Three execution paths share one scoring core:
+  * ``attn_train``   — full-sequence training/prefill, q-chunked to bound the
+                       score-matrix working set (32k prefill stays compilable).
+  * ``attn_decode``  — one new token against a (possibly rolling) KV cache.
+  * sequence-sharded decode — the cache is sharded over the "data" axis
+    (long_500k); partial attention per shard is combined with a
+    log-sum-exp psum (2-pass-free online softmax merge).
+
+Head layout is the padded layout from ``sharding.attn_dims``; kv heads are
+expanded to q-head alignment with a gather so GQA/MQA/dense all run the same
+einsums.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import params as pdefs
+from repro.models.layers import cast, rope, softcap
+from repro.sharding.rules import AttnDims, ParallelContext
+
+NEG_INF = -1e30
+
+
+def attn_defs(d_model: int, dims: AttnDims, *, qkv_bias: bool = False):
+    hd = dims.head_dim
+    kv_shard = "model" if dims.kv_sharded else None
+    defs = {
+        "wq": pdefs.linear(d_model, dims.q_heads * hd, shard="model"),
+        "wk": pdefs.linear(d_model, dims.kv_heads * hd, shard=kv_shard),
+        "wv": pdefs.linear(d_model, dims.kv_heads * hd, shard=kv_shard),
+        "wo": pdefs.linear(dims.q_heads * hd, d_model, shard="model", shard_dim=0),
+    }
+    if qkv_bias:
+        defs["bq"] = pdefs.bias(dims.q_heads * hd, shard="model")
+        defs["bk"] = pdefs.bias(dims.kv_heads * hd, shard=kv_shard)
+        defs["bv"] = pdefs.bias(dims.kv_heads * hd, shard=kv_shard)
+    return defs
+
+
+def _project_qkv(p, x, dims: AttnDims, ctx: ParallelContext, dtype):
+    """Project to q,k,v and expand kv to the q-head-aligned layout."""
+    B, S, _ = x.shape
+    hd = dims.head_dim
+    q = x @ cast(p["wq"], dtype)
+    k = x @ cast(p["wk"], dtype)
+    v = x @ cast(p["wv"], dtype)
+    if "bq" in p:
+        q = q + cast(p["bq"], dtype)
+        k = k + cast(p["bk"], dtype)
+        v = v + cast(p["bv"], dtype)
+    q = q.reshape(B, S, dims.q_local, hd)
+    k = k.reshape(B, S, dims.kv_local, hd)
+    v = v.reshape(B, S, dims.kv_local, hd)
+    return q, k, v
+
+
+def _kv_head_map(dims: AttnDims, ctx: ParallelContext):
+    """For each local q head, the LOCAL kv-head index holding its group."""
+    gq = ctx.model_index() * dims.q_local + jnp.arange(dims.q_local)
+    kv_global = gq // dims.group
+    if dims.kv_sharded:
+        return kv_global - ctx.model_index() * dims.kv_local
+    return kv_global  # replicated: local index == global index
+
+
+def expand_kv(k, dims: AttnDims, ctx: ParallelContext):
+    """(B,S,KVl,hd) -> (B,S,Hl,hd) by gathering each q head's kv head."""
+    if dims.kv_local == dims.q_local:
+        return k
+    return jnp.take(k, _kv_head_map(dims, ctx), axis=2)
+
+
+def _scores_block(q, k, v, *, scale, cap, mask):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,H,hd) mask:(Sq,Sk) or (B,Sq,Sk) bool."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    s = softcap(s, cap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None]
+        else:
+            mask = mask[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int):
+    """q_pos:(Sq,) k_pos:(Sk,) -> (Sq,Sk) bool of allowed pairs."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def attention_core(q, k, v, *, causal: bool, window: int,
+                   cap: Optional[float], chunk: int = 2048,
+                   q_offset: int = 0):
+    """Full-sequence attention, q-chunked when long. All heads local."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    if Sq <= 2 * chunk:
+        mask = _mask(q_offset + jnp.arange(Sq), jnp.arange(Sk),
+                     causal=causal, window=window)
+        return _scores_block(q, k, v, scale=scale, cap=cap, mask=mask)
+
+    assert Sq % chunk == 0, (Sq, chunk)
+    n_chunks = Sq // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    if window > 0:
+        # local attention: slice a static-size kv band per q chunk
+        band = ((window + chunk - 1) // chunk) * chunk + chunk
+
+        def body(carry, inp):
+            i, qi = inp
+            start = jnp.maximum(i * chunk - (band - chunk), 0)
+            start = jnp.minimum(start, Sk - band) if Sk >= band else 0
+            ki = lax.dynamic_slice_in_dim(k, start, min(band, Sk), axis=1)
+            vi = lax.dynamic_slice_in_dim(v, start, min(band, Sk), axis=1)
+            qpos = q_offset + i * chunk + jnp.arange(chunk)
+            kpos = start + jnp.arange(min(band, Sk))
+            mask = _mask(qpos, kpos, causal=causal, window=window)
+            return carry, _scores_block(qi, ki, vi, scale=scale, cap=cap, mask=mask)
+
+        _, out = lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    else:
+        def body(carry, inp):
+            i, qi = inp
+            qpos = q_offset + i * chunk + jnp.arange(chunk)
+            mask = _mask(qpos, jnp.arange(Sk), causal=causal, window=window)
+            return carry, _scores_block(qi, k, v, scale=scale, cap=cap, mask=mask)
+
+        _, out = lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill
+# ---------------------------------------------------------------------------
+
+
+def attn_train(p, x, dims: AttnDims, ctx: ParallelContext, *,
+               causal: bool, window: int, cap: Optional[float],
+               rope_theta: float, positions=None, dtype="bfloat16",
+               chunk: int = 2048, return_cache_len: int = 0):
+    """Full-sequence attention layer. Returns (out, cache_kv | None).
+
+    When ``return_cache_len`` > 0 the (roped) k/v are also returned as a
+    prefill cache of that length (rolling-trimmed for windowed layers).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, dims, ctx, dtype)
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    ke = expand_kv(k, dims, ctx)
+    ve = expand_kv(v, dims, ctx)
+    out = attention_core(q, ke, ve, causal=causal, window=window, cap=cap, chunk=chunk)
+    out = out.reshape(B, S, dims.q_local * dims.head_dim)
+    out = out @ cast(p["wo"], dtype)
+    out = ctx.psum_model(out)
+    cache = None
+    if return_cache_len:
+        C = return_cache_len
+        if S >= C:
+            kc, vc = k[:, S - C:], v[:, S - C:]
+            # roll so that slot j holds position p with p % C == j
+            shift = (S - C) % C if C else 0
+            kc = jnp.roll(kc, shift=shift, axis=1)
+            vc = jnp.roll(vc, shift=shift, axis=1)
+        else:
+            pad = C - S
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = (kc, vc)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, cached)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, C, KVl, hd)   C = window or max context
+    v: jax.Array
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos, ctx: ParallelContext):
+    """Insert the new (roped) k/v at slot pos % C (seq-sharded aware)."""
+    C = cache.k.shape[1]
+    slot = pos % C
+    if ctx.seq_axis:
+        Cl = C  # local length; global slot mapped to a shard
+        lo = ctx.seq_index() * Cl
+        here = (slot >= lo) & (slot < lo + Cl)
+        ku = lax.dynamic_update_slice_in_dim(cache.k, k_new, jnp.clip(slot - lo, 0, Cl - 1), axis=1)
+        vu = lax.dynamic_update_slice_in_dim(cache.v, v_new, jnp.clip(slot - lo, 0, Cl - 1), axis=1)
+        return KVCache(jnp.where(here, ku, cache.k), jnp.where(here, vu, cache.v))
+    ku = lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    vu = lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    return KVCache(ku, vu)
+
+
+def attn_decode(p, x, cache: KVCache, pos, dims: AttnDims,
+                ctx: ParallelContext, *, window: int, cap: Optional[float],
+                rope_theta: float, total_len: int, dtype="bfloat16"):
+    """One-token decode. x: (B,1,d); pos: scalar int32 (current position).
+
+    ``total_len`` is the global cache length C_total (for seq-sharded caches
+    the local cache holds C_total / seq_shards slots).
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x.shape[0]
+    hd = dims.head_dim
+    q, k, v = _project_qkv(p, x, dims, ctx, dtype)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posv, rope_theta)
+    k = rope(k, posv, rope_theta)
+    # global slot of the new token
+    gslot = pos % total_len
+    if ctx.seq_axis:
+        Cl = cache.k.shape[1]
+        lo = ctx.seq_index() * Cl
+        here = (gslot >= lo) & (gslot < lo + Cl)
+        local_slot = jnp.clip(gslot - lo, 0, Cl - 1)
+        kud = lax.dynamic_update_slice_in_dim(cache.k, k, local_slot, axis=1)
+        vud = lax.dynamic_update_slice_in_dim(cache.v, v, local_slot, axis=1)
+        new_cache = KVCache(jnp.where(here, kud, cache.k),
+                            jnp.where(here, vud, cache.v))
+        slot_ids = lo + jnp.arange(Cl)
+    else:
+        new_cache = KVCache(
+            lax.dynamic_update_slice_in_dim(cache.k, k, gslot, axis=1),
+            lax.dynamic_update_slice_in_dim(cache.v, v, gslot, axis=1))
+        slot_ids = jnp.arange(total_len)
+
+    ke = expand_kv(new_cache.k, dims, ctx)
+    ve = expand_kv(new_cache.v, dims, ctx)
+    # validity: slot filled (j <= pos or cache has wrapped) and inside window
+    filled = (slot_ids <= pos) | (pos >= total_len)
+    if window > 0 and total_len > window:
+        # slot j holds position p_j = pos - ((gslot - j) % total_len)
+        age = (gslot - slot_ids) % total_len
+        filled &= age < window
+    valid = filled[None, None, None, :]  # (1,1,1,C)
+
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * hd ** -0.5
+    s = softcap(s, cap)
+    s = jnp.where(valid, s, NEG_INF)
+    if ctx.seq_axis:
+        m_loc = jnp.max(s, axis=-1)                      # (B,H,1)
+        m = ctx.pmax_seq(m_loc)
+        w = jnp.exp(s - m[..., None])
+        denom = ctx.psum_seq(jnp.sum(w, axis=-1))        # (B,H,1)
+        part = jnp.einsum("bhqk,bkhd->bqhd", w.astype(ve.dtype), ve)
+        out = ctx.psum_seq(part) / denom.transpose(0, 2, 1)[..., None]
+    else:
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(ve.dtype), ve)
+    out = out.reshape(B, 1, dims.q_local * hd).astype(jnp.dtype(dtype))
+    out = ctx.psum_model(out @ cast(p["wo"], dtype))
+    return out, new_cache

@@ -1,0 +1,112 @@
+"""ConvMixer (Trockman & Kolter 2022) — the paper's second evaluation model —
+plus a small MLP classifier. These run the *paper-faithful* federated
+benchmarks (CIFAR-shaped synthetic data) on CPU; they use the simulation path
+of the FL core (no tensor parallelism), so ``ctx`` is unused here.
+
+Simplification vs the reference ConvMixer: BatchNorm is replaced by a
+per-channel scale+bias (no cross-client batch statistics — BN is known to be
+problematic in FL anyway, see e.g. FedBN)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pdefs
+
+
+@dataclass(frozen=True)
+class ConvMixerConfig:
+    dim: int = 256
+    depth: int = 8
+    kernel: int = 9
+    patch: int = 2
+    num_classes: int = 10
+    image: int = 32
+    channels: int = 3
+
+
+def convmixer_defs(c: ConvMixerConfig):
+    d = {
+        "patch_w": pdefs.ParamDef((c.patch, c.patch, c.channels, c.dim),
+                                  scale=(c.patch * c.patch * c.channels) ** -0.5),
+        "patch_b": pdefs.bias(c.dim),
+        "head": pdefs.linear(c.dim, c.num_classes),
+        "head_b": pdefs.bias(c.num_classes),
+    }
+    for i in range(c.depth):
+        d[f"block{i}"] = {
+            "dw": pdefs.ParamDef((c.kernel, c.kernel, 1, c.dim),
+                                 scale=(c.kernel * c.kernel) ** -0.5),
+            "dw_s": pdefs.norm_scale(c.dim), "dw_b": pdefs.bias(c.dim),
+            "pw": pdefs.linear(c.dim, c.dim),
+            "pw_s": pdefs.norm_scale(c.dim), "pw_b": pdefs.bias(c.dim),
+        }
+    return d
+
+
+def _depthwise(x, w):
+    # x: (B,H,W,C), w: (k,k,1,C)
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", feature_group_count=x.shape[-1],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def convmixer_apply(p, images, c: ConvMixerConfig):
+    x = jax.lax.conv_general_dilated(
+        images, p["patch_w"], (c.patch, c.patch), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["patch_b"]
+    x = jax.nn.gelu(x)
+    for i in range(c.depth):
+        b = p[f"block{i}"]
+        h = jax.nn.gelu(_depthwise(x, b["dw"])) * b["dw_s"] + b["dw_b"]
+        x = x + h
+        x = jax.nn.gelu(x @ b["pw"]) * b["pw_s"] + b["pw_b"]
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head"] + p["head_b"]
+
+
+def convmixer_loss(p, batch, c: ConvMixerConfig):
+    logits = convmixer_apply(p, batch["x"], c)
+    ce = -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                       batch["y"][:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+    return ce, {"acc": acc}
+
+
+# -- tiny MLP for fast optimizer-level benchmarks ---------------------------
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int = 64
+    hidden: int = 128
+    depth: int = 2
+    num_classes: int = 10
+
+
+def mlp_defs(c: MLPConfig):
+    d = {}
+    prev = c.in_dim
+    for i in range(c.depth):
+        d[f"w{i}"] = pdefs.linear(prev, c.hidden)
+        d[f"b{i}"] = pdefs.bias(c.hidden)
+        prev = c.hidden
+    d["w_out"] = pdefs.linear(prev, c.num_classes)
+    d["b_out"] = pdefs.bias(c.num_classes)
+    return d
+
+
+def mlp_apply(p, x, c: MLPConfig):
+    for i in range(c.depth):
+        x = jax.nn.relu(x @ p[f"w{i}"] + p[f"b{i}"])
+    return x @ p["w_out"] + p["b_out"]
+
+
+def mlp_loss(p, batch, c: MLPConfig):
+    logits = mlp_apply(p, batch["x"], c)
+    ce = -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                       batch["y"][:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+    return ce, {"acc": acc}

@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill: decompress the latent kv for all positions and run standard
+multi-head attention (heads sharded over "model").
+
+Decode: the *absorbed* formulation — W_uk is folded into the query and W_uv
+into the output so attention runs directly against the compressed latent
+cache ``c_kv`` (kv_lora_rank + rope_head_dim per position, shared across
+heads). This makes decode cost linear in context with a tiny cache, which is
+why deepseek-v3 is allowed to run the long_500k shape (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MLAConfig
+from repro.models import params as pdefs
+from repro.models.layers import cast, rope, softcap
+from repro.sharding.rules import ParallelContext, pad_to
+
+NEG_INF = -1e30
+
+
+def mla_defs(d_model: int, num_heads: int, m: MLAConfig, tp: int):
+    H = pad_to(num_heads, tp)
+    qh = m.nope_head_dim + m.rope_head_dim
+    return {
+        "w_dq": pdefs.linear(d_model, m.q_lora_rank),
+        "q_norm": pdefs.norm_scale(m.q_lora_rank),
+        "w_uq": pdefs.linear(m.q_lora_rank, H * qh, shard="model"),
+        "w_dkv": pdefs.linear(d_model, m.kv_lora_rank),
+        "kv_norm": pdefs.norm_scale(m.kv_lora_rank),
+        "w_kr": pdefs.linear(d_model, m.rope_head_dim),
+        "w_uk": pdefs.linear(m.kv_lora_rank, H * m.nope_head_dim, shard="model"),
+        "w_uv": pdefs.linear(m.kv_lora_rank, H * m.v_head_dim, shard="model"),
+        "wo": pdefs.linear(H * m.v_head_dim, d_model, shard="model", shard_dim=0),
+    }
+
+
+def _queries(p, x, m: MLAConfig, Hl: int, positions, theta, dtype):
+    from repro.models.layers import rms_norm
+    B, S, _ = x.shape
+    cq = rms_norm(p["q_norm"], x @ cast(p["w_dq"], dtype))
+    q = (cq @ cast(p["w_uq"], dtype)).reshape(B, S, Hl, -1)
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = rope(q[..., m.nope_head_dim:], positions, theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, m: MLAConfig, positions, theta, dtype):
+    from repro.models.layers import rms_norm
+    c_kv = rms_norm(p["kv_norm"], x @ cast(p["w_dkv"], dtype))
+    k_rope = rope((x @ cast(p["w_kr"], dtype))[:, :, None, :], positions, theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def _pack_cache(arr, C):
+    """(B,S,...) -> (B,C,...) rolling layout: slot j holds position p, p%C==j."""
+    B, S = arr.shape[0], arr.shape[1]
+    if S >= C:
+        out = arr[:, S - C:]
+        return jnp.roll(out, shift=(S - C) % C, axis=1)
+    pad = [(0, 0), (0, C - S)] + [(0, 0)] * (arr.ndim - 2)
+    return jnp.pad(arr, pad)
+
+
+def mla_train(p, x, m: MLAConfig, ctx: ParallelContext, *,
+              rope_theta: float, cap: Optional[float] = None,
+              dtype="bfloat16", chunk: int = 2048, return_cache_len: int = 0):
+    """Full-sequence causal MLA. x: (B,S,d)."""
+    B, S, _ = x.shape
+    Hl = p["w_uq"].shape[1] // (m.nope_head_dim + m.rope_head_dim)
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q_nope, q_rope = _queries(p, x, m, Hl, positions, rope_theta, dtype)
+    c_kv, k_rope = _latents(p, x, m, positions, rope_theta, dtype)
+    k_nope = (c_kv @ cast(p["w_uk"], dtype)).reshape(B, S, Hl, m.nope_head_dim)
+    v = (c_kv @ cast(p["w_uv"], dtype)).reshape(B, S, Hl, m.v_head_dim)
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    n_chunks = max(S // chunk, 1)
+    cs = S // n_chunks
+
+    def body(_, i):
+        qn = lax.dynamic_slice_in_dim(q_nope, i * cs, cs, axis=1)
+        qr = lax.dynamic_slice_in_dim(q_rope, i * cs, cs, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope).astype(jnp.float32)
+        s = s + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope).astype(jnp.float32)
+        s = softcap(s * scale, cap)
+        qpos = i * cs + jnp.arange(cs)
+        mask = qpos[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+    _, out = lax.scan(body, None, jnp.arange(n_chunks))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hl * m.v_head_dim)
+    out = ctx.psum_model(out @ cast(p["wo"], dtype))
+    if return_cache_len:
+        C = return_cache_len
+        cache = MLACache(_pack_cache(c_kv, C), _pack_cache(k_rope, C))
+        return out, cache
+    return out
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, C, kv_lora_rank)
+    k_rope: jax.Array  # (B, C, rope_head_dim)
+
+
+def mla_decode(p, x, cache: MLACache, pos, m: MLAConfig,
+               ctx: ParallelContext, *, rope_theta: float, total_len: int,
+               cap: Optional[float] = None, dtype="bfloat16"):
+    """Absorbed one-token decode against the latent cache."""
+    B = x.shape[0]
+    Hl = p["w_uq"].shape[1] // (m.nope_head_dim + m.rope_head_dim)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(p, x, m, Hl, posv, rope_theta, dtype)
+    c_new, kr_new = _latents(p, x, m, posv, rope_theta, dtype)
+
+    gslot = pos % total_len
+    if ctx.seq_axis:
+        Cl = cache.c_kv.shape[1]
+        lo = ctx.seq_index() * Cl
+        here = (gslot >= lo) & (gslot < lo + Cl)
+        sl = jnp.clip(gslot - lo, 0, Cl - 1)
+        cu = lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, sl, axis=1)
+        ku = lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, sl, axis=1)
+        new_cache = MLACache(jnp.where(here, cu, cache.c_kv),
+                             jnp.where(here, ku, cache.k_rope))
+        slot_ids = lo + jnp.arange(Cl)
+    else:
+        new_cache = MLACache(
+            lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, gslot, axis=1),
+            lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, gslot, axis=1))
+        slot_ids = jnp.arange(total_len)
+
+    # absorb W_uk into q:  q_lat[h] = q_nope[h] @ W_uk[:, h].T
+    w_uk = cast(p["w_uk"], dtype).reshape(m.kv_lora_rank, Hl, m.nope_head_dim)
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)  # (B,1,Hl,kv_lora)
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhc,bkc->bhqk", q_lat, new_cache.c_kv).astype(jnp.float32)
+    s = s + jnp.einsum("bqhd,bkd->bhqk", q_rope, new_cache.k_rope).astype(jnp.float32)
+    s = softcap(s * scale, cap)
+    filled = (slot_ids <= pos) | (pos >= total_len)
+    s = jnp.where(filled[None, None, None, :], s, NEG_INF)
+    if ctx.seq_axis:
+        mx = ctx.pmax_seq(jnp.max(s, axis=-1))
+        w = jnp.exp(s - mx[..., None])
+        denom = ctx.psum_seq(jnp.sum(w, axis=-1))
+        lat = ctx.psum_seq(
+            jnp.einsum("bhqk,bkc->bqhc", w.astype(new_cache.c_kv.dtype), new_cache.c_kv))
+        lat = lat / denom.transpose(0, 2, 1)[..., None]
+    else:
+        w = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhqk,bkc->bqhc", w.astype(new_cache.c_kv.dtype), new_cache.c_kv)
+    # absorb W_uv on the way out
+    w_uv = cast(p["w_uv"], dtype).reshape(m.kv_lora_rank, Hl, m.v_head_dim)
+    lat = lat.astype(jnp.dtype(dtype))
+    out = jnp.einsum("bqhc,chd->bqhd", lat, w_uv).reshape(B, 1, Hl * m.v_head_dim)
+    return ctx.psum_model(out @ cast(p["wo"], dtype)), new_cache

@@ -1,0 +1,101 @@
+"""Griffin recurrent block: gated temporal conv + RG-LRU (arXiv:2402.19427).
+
+The RG-LRU recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t)  is
+elementwise over the width dimension, so it shards perfectly over the
+"model" axis and parallelizes over sequence with ``lax.associative_scan``.
+
+Deviation (DESIGN.md): the input/recurrence gates use diagonal (per-channel)
+weights rather than Griffin's block-diagonal ones — the recurrence structure,
+sqrt(1-a²) input normalization and the c=8 decay constant are as published.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import RGLRUConfig
+from repro.models import params as pdefs
+from repro.models.layers import cast
+from repro.sharding.rules import ParallelContext
+
+
+def rglru_defs(d_model: int, r: RGLRUConfig):
+    w = r.lru_width or d_model
+    return {
+        "w_gate": pdefs.linear(d_model, w, shard="model"),
+        "w_x": pdefs.linear(d_model, w, shard="model"),
+        "conv_k": pdefs.ParamDef((r.conv_width, w), pdefs.P(None, "model"),
+                                 scale=r.conv_width ** -0.5),
+        "lam": pdefs.ParamDef((w,), pdefs.P("model"), scale=1.0),
+        "w_rg": pdefs.ParamDef((w,), pdefs.P("model"), scale=1.0),
+        "b_rg": pdefs.bias(w, shard="model"),
+        "w_ig": pdefs.ParamDef((w,), pdefs.P("model"), scale=1.0),
+        "b_ig": pdefs.bias(w, shard="model"),
+        "w_out": pdefs.linear(w, d_model, shard="model", shard_dim=0),
+    }
+
+
+def _causal_conv(x, kern, state=None):
+    """Depthwise causal conv over seq. x:(B,S,w), kern:(cw,w).
+    state: (B,cw-1,w) previous inputs for decode; returns (y, new_state)."""
+    cw = kern.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kern[cw - 1 - i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return y, new_state
+
+
+def _gates(p, xc, r: RGLRUConfig):
+    rg = jax.nn.sigmoid(xc * p["w_rg"] + p["b_rg"])
+    ig = jax.nn.sigmoid(xc * p["w_ig"] + p["b_ig"])
+    log_a = -r.c_constant * jax.nn.softplus(p["lam"]) * rg   # (B,S,w) fp32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (ig * xc)
+    return a, b
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array           # (B, w_local)
+    conv: jax.Array        # (B, cw-1, w_local)
+
+
+def rglru_train(p, x, r: RGLRUConfig, ctx: ParallelContext, dtype="bfloat16",
+                return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d) [, final RGLRUState]."""
+    gate = jax.nn.gelu(x @ cast(p["w_gate"], dtype))
+    xb = x @ cast(p["w_x"], dtype)
+    xc, conv_state = _causal_conv(xb, cast(p["conv_k"], dtype))
+    xc32 = xc.astype(jnp.float32)
+    a, b = _gates(p, xc32, r)
+
+    def combine(l, rr):
+        a1, b1 = l
+        a2, b2 = rr
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    out = (gate * h.astype(dtype)) @ cast(p["w_out"], dtype)
+    out = ctx.psum_model(out)
+    if return_state:
+        return out, RGLRUState(h=h[:, -1], conv=conv_state)
+    return out
+
+
+def rglru_decode(p, x, state: RGLRUState, r: RGLRUConfig,
+                 ctx: ParallelContext, dtype="bfloat16"):
+    """One-step decode. x: (B,1,d)."""
+    gate = jax.nn.gelu(x @ cast(p["w_gate"], dtype))
+    xb = x @ cast(p["w_x"], dtype)
+    xc, conv_state = _causal_conv(xb, cast(p["conv_k"], dtype), state.conv)
+    a, b = _gates(p, xc.astype(jnp.float32), r)
+    h = a[:, 0] * state.h + b[:, 0]
+    out = (gate[:, 0] * h.astype(dtype)) @ cast(p["w_out"], dtype)
+    out = ctx.psum_model(out)[:, None, :]
+    return out, RGLRUState(h=h, conv=conv_state.astype(state.conv.dtype))

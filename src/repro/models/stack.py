@@ -1,0 +1,417 @@
+"""Layer-stack assembly: periodic layer groups scanned with ``lax.scan``.
+
+Architectures mix block kinds (attention windows alternate in gemma-2,
+RG-LRU/attention alternate 2:1 in recurrentgemma, mLSTM/sLSTM in xLSTM). We
+find the minimal period of the per-layer (kind, window) descriptor list and
+scan over whole periods — every branch inside the scan body is *static*, so
+the compiled HLO contains each distinct layer kind exactly once regardless
+of depth. Leftover layers (26 = 8x(rec,rec,attn)+2) run unscanned as a tail.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import params as pdefs
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import ffn_apply, ffn_defs, rms_norm
+from repro.sharding.rules import AttnDims, ParallelContext, attn_dims
+
+
+@dataclass(frozen=True)
+class LayerDesc:
+    kind: str      # attn | rglru | mlstm | slstm
+    window: int    # 0 = global (attn only)
+
+
+def plan_stack(cfg: ModelConfig) -> Tuple[Tuple[LayerDesc, ...], int, Tuple[LayerDesc, ...]]:
+    """-> (group_pattern, n_groups, tail_layers)."""
+    descs = [LayerDesc(k, w) for k, w in zip(cfg.layer_kinds, cfg.layer_windows)]
+    L = len(descs)
+    for p in range(1, L + 1):
+        n = L // p
+        if n == 0:
+            continue
+        if all(descs[i] == descs[i % p] for i in range(n * p)):
+            return tuple(descs[:p]), n, tuple(descs[n * p:])
+    return tuple(descs), 1, ()
+
+
+# ---------------------------------------------------------------------------
+# Per-layer defs / apply
+# ---------------------------------------------------------------------------
+
+
+def layer_defs(cfg: ModelConfig, desc: LayerDesc, dims: AttnDims, tp: int):
+    d = cfg.d_model
+    defs = {"norm1": pdefs.norm_scale(d)}
+    if desc.kind == "attn":
+        if cfg.mla is not None:
+            defs["mix"] = mla_mod.mla_defs(d, cfg.num_heads, cfg.mla, tp)
+        else:
+            defs["mix"] = attn.attn_defs(d, dims, qkv_bias=cfg.qkv_bias)
+        defs["norm2"] = pdefs.norm_scale(d)
+        if cfg.moe is not None:
+            defs["mlp"] = moe_mod.moe_defs(d, cfg.moe, tp, cfg.act)
+        elif cfg.d_ff > 0:
+            defs["mlp"] = ffn_defs(d, cfg.d_ff, cfg.act, cfg.gated_ffn)
+    elif desc.kind == "rglru":
+        defs["mix"] = rglru_mod.rglru_defs(d, cfg.rglru)
+        if cfg.d_ff > 0:
+            defs["norm2"] = pdefs.norm_scale(d)
+            defs["mlp"] = ffn_defs(d, cfg.d_ff, cfg.act, cfg.gated_ffn)
+    elif desc.kind == "mlstm":
+        defs["mix"] = xlstm_mod.mlstm_defs(d, cfg.num_heads, cfg.xlstm)
+    elif desc.kind == "slstm":
+        defs["mix"] = xlstm_mod.slstm_defs(d, cfg.num_heads, cfg.xlstm)
+    else:
+        raise ValueError(desc.kind)
+    return defs
+
+
+def layer_train(p, x, cfg: ModelConfig, desc: LayerDesc, dims: AttnDims,
+                ctx: ParallelContext, chunk: int = 2048):
+    """One layer, full sequence. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = ctx.tp_copy(rms_norm(p["norm1"], x, cfg.norm_eps))
+    if desc.kind == "attn":
+        if cfg.mla is not None:
+            out = mla_mod.mla_train(p["mix"], h, cfg.mla, ctx,
+                                    rope_theta=cfg.rope_theta, cap=cfg.attn_softcap,
+                                    dtype=cfg.dtype, chunk=chunk)
+        else:
+            out, _ = attn.attn_train(p["mix"], h, dims, ctx,
+                                     causal=not cfg.is_encoder, window=desc.window,
+                                     cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+                                     dtype=cfg.dtype, chunk=chunk)
+        x = x + out
+        h2 = ctx.tp_copy(rms_norm(p["norm2"], x, cfg.norm_eps))
+        if cfg.moe is not None:
+            out2, aux = moe_mod.moe_ffn(p["mlp"], h2, cfg.moe, ctx,
+                                        act=cfg.act, dtype=cfg.dtype)
+        else:
+            out2 = ffn_apply(p["mlp"], h2, ctx, act=cfg.act, dtype=cfg.dtype)
+        return x + out2, aux
+    if desc.kind == "rglru":
+        x = x + rglru_mod.rglru_train(p["mix"], h, cfg.rglru, ctx, cfg.dtype)
+        if "mlp" in p:
+            h2 = ctx.tp_copy(rms_norm(p["norm2"], x, cfg.norm_eps))
+            x = x + ffn_apply(p["mlp"], h2, ctx, act=cfg.act, dtype=cfg.dtype)
+        return x, aux
+    if desc.kind == "mlstm":
+        if cfg.xlstm.chunkwise:
+            return x + xlstm_mod.mlstm_train_chunkwise(
+                p["mix"], h, cfg.num_heads, ctx, cfg.dtype,
+                chunk=cfg.xlstm.chunk_size), aux
+        return x + xlstm_mod.mlstm_train(p["mix"], h, cfg.num_heads, ctx,
+                                         cfg.dtype, chunk=chunk), aux
+    if desc.kind == "slstm":
+        return x + xlstm_mod.slstm_train(p["mix"], h, cfg.num_heads, ctx,
+                                         cfg.dtype), aux
+    raise ValueError(desc.kind)
+
+
+def layer_prefill(p, x, cfg: ModelConfig, desc: LayerDesc, dims: AttnDims,
+                  ctx: ParallelContext, max_len: int, chunk: int = 2048):
+    """Full-sequence forward that also emits the layer's decode cache."""
+    h = ctx.tp_copy(rms_norm(p["norm1"], x, cfg.norm_eps))
+    if desc.kind == "attn":
+        C = min(desc.window, max_len) if desc.window > 0 else max_len
+        if cfg.mla is not None:
+            out, cache = mla_mod.mla_train(
+                p["mix"], h, cfg.mla, ctx, rope_theta=cfg.rope_theta,
+                cap=cfg.attn_softcap, dtype=cfg.dtype, chunk=chunk,
+                return_cache_len=C)
+            cache = {"c_kv": cache.c_kv, "k_rope": cache.k_rope}
+        else:
+            out, kv = attn.attn_train(
+                p["mix"], h, dims, ctx, causal=not cfg.is_encoder,
+                window=desc.window, cap=cfg.attn_softcap,
+                rope_theta=cfg.rope_theta, dtype=cfg.dtype, chunk=chunk,
+                return_cache_len=C)
+            cache = {"k": kv[0], "v": kv[1]}
+        x = x + out
+        h2 = ctx.tp_copy(rms_norm(p["norm2"], x, cfg.norm_eps))
+        if cfg.moe is not None:
+            out2, _ = moe_mod.moe_ffn(p["mlp"], h2, cfg.moe, ctx,
+                                      act=cfg.act, dtype=cfg.dtype)
+        else:
+            out2 = ffn_apply(p["mlp"], h2, ctx, act=cfg.act, dtype=cfg.dtype)
+        return x + out2, cache
+    if desc.kind == "rglru":
+        out, st = rglru_mod.rglru_train(p["mix"], h, cfg.rglru, ctx, cfg.dtype,
+                                        return_state=True)
+        x = x + out
+        if "mlp" in p:
+            h2 = ctx.tp_copy(rms_norm(p["norm2"], x, cfg.norm_eps))
+            x = x + ffn_apply(p["mlp"], h2, ctx, act=cfg.act, dtype=cfg.dtype)
+        return x, {"h": st.h, "conv": st.conv}
+    if desc.kind == "mlstm":
+        if cfg.xlstm.chunkwise:
+            out, st = xlstm_mod.mlstm_train_chunkwise(
+                p["mix"], h, cfg.num_heads, ctx, cfg.dtype,
+                chunk=cfg.xlstm.chunk_size, return_state=True)
+        else:
+            out, st = xlstm_mod.mlstm_train(p["mix"], h, cfg.num_heads, ctx,
+                                            cfg.dtype, chunk=chunk,
+                                            return_state=True)
+        return x + out, {"C": st.C, "n": st.n, "m": st.m}
+    if desc.kind == "slstm":
+        out, st = xlstm_mod.slstm_train(p["mix"], h, cfg.num_heads, ctx,
+                                        cfg.dtype, return_state=True)
+        return x + out, {"h": st.h, "c": st.c, "n": st.n, "m": st.m}
+    raise ValueError(desc.kind)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_defs(cfg: ModelConfig, desc: LayerDesc, dims: AttnDims,
+                     batch: int, max_len: int, *, seq_sharded: bool):
+    """ParamDef tree describing one layer's decode state (GLOBAL shapes)."""
+    d = cfg.d_model
+    bspec = None if seq_sharded else "data"  # batch sharded unless seq-sharded
+    if desc.kind == "attn":
+        C = min(desc.window, max_len) if desc.window > 0 else max_len
+        sspec = "data" if (seq_sharded and C == max_len) else None
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {
+                "c_kv": pdefs.ParamDef((batch, C, m.kv_lora_rank),
+                                       P(bspec, sspec, None), dtype=cfg.dtype),
+                "k_rope": pdefs.ParamDef((batch, C, m.rope_head_dim),
+                                         P(bspec, sspec, None), dtype=cfg.dtype),
+            }
+        kvspec = "model" if dims.kv_sharded else None
+        kvh = dims.kv_heads if dims.kv_sharded else dims.kv_local
+        return {
+            "k": pdefs.ParamDef((batch, C, kvh, dims.head_dim),
+                                P(bspec, sspec, kvspec, None), dtype=cfg.dtype),
+            "v": pdefs.ParamDef((batch, C, kvh, dims.head_dim),
+                                P(bspec, sspec, kvspec, None), dtype=cfg.dtype),
+        }
+    if desc.kind == "rglru":
+        w = cfg.rglru.lru_width or d
+        cw = cfg.rglru.conv_width
+        return {
+            "h": pdefs.ParamDef((batch, w), P(bspec, "model"), dtype="float32"),
+            "conv": pdefs.ParamDef((batch, cw - 1, w), P(bspec, None, "model"),
+                                   dtype=cfg.dtype),
+        }
+    if desc.kind == "mlstm":
+        from repro.sharding.rules import pad_to
+        di = pad_to(int(d * cfg.xlstm.mlstm_proj_factor), 128)
+        nh = cfg.num_heads
+        dh = di // nh
+        return {
+            "C": pdefs.ParamDef((batch, nh, dh, di // nh),
+                                P(bspec, None, None, "model"), dtype="float32"),
+            "n": pdefs.ParamDef((batch, nh, dh), P(bspec, None, None),
+                                dtype="float32"),
+            "m": pdefs.ParamDef((batch, nh), P(bspec, None), dtype="float32"),
+        }
+    if desc.kind == "slstm":
+        return {k: pdefs.ParamDef((batch, d), P(bspec, None), dtype="float32")
+                for k in ("h", "c", "n", "m")}
+    raise ValueError(desc.kind)
+
+
+def init_cache_value(defs):
+    """Zero-initialized concrete cache (m-states get -1e30)."""
+
+    def mk(path, dx):
+        name = jax.tree_util.keystr(path)
+        if name.endswith("'m']"):
+            return jnp.full(dx.shape, -1e30, jnp.dtype(dx.dtype))
+        return jnp.zeros(dx.shape, jnp.dtype(dx.dtype))
+
+    flat, td = jax.tree_util.tree_flatten_with_path(defs, is_leaf=pdefs.is_def)
+    return jax.tree_util.tree_unflatten(td, [mk(p, d) for p, d in flat])
+
+
+def layer_decode(p, x, cache, pos, cfg: ModelConfig, desc: LayerDesc,
+                 dims: AttnDims, ctx: ParallelContext, max_len: int):
+    """One-token decode through one layer. Returns (x, new_cache)."""
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    if desc.kind == "attn":
+        C = min(desc.window, max_len) if desc.window > 0 else max_len
+        lctx = ctx if C == max_len else ctx.with_(seq_axis=None, seq_shards=1)
+        if cfg.mla is not None:
+            out, nc = mla_mod.mla_decode(
+                p["mix"], h, mla_mod.MLACache(cache["c_kv"], cache["k_rope"]),
+                pos, cfg.mla, lctx, rope_theta=cfg.rope_theta, total_len=C,
+                cap=cfg.attn_softcap, dtype=cfg.dtype)
+            new_cache = {"c_kv": nc.c_kv, "k_rope": nc.k_rope}
+        else:
+            out, nc = attn.attn_decode(
+                p["mix"], h, attn.KVCache(cache["k"], cache["v"]), pos, dims,
+                lctx, window=desc.window, cap=cfg.attn_softcap,
+                rope_theta=cfg.rope_theta, total_len=C, dtype=cfg.dtype)
+            new_cache = {"k": nc.k, "v": nc.v}
+        x = x + out
+        h2 = ctx.tp_copy(rms_norm(p["norm2"], x, cfg.norm_eps))
+        if cfg.moe is not None:
+            out2, _ = moe_mod.moe_ffn(p["mlp"], h2, cfg.moe, ctx,
+                                      act=cfg.act, dtype=cfg.dtype)
+        else:
+            out2 = ffn_apply(p["mlp"], h2, ctx, act=cfg.act, dtype=cfg.dtype)
+        return x + out2, new_cache
+    if desc.kind == "rglru":
+        out, st = rglru_mod.rglru_decode(
+            p["mix"], h, rglru_mod.RGLRUState(cache["h"], cache["conv"]),
+            cfg.rglru, ctx, cfg.dtype)
+        x = x + out
+        if "mlp" in p:
+            h2 = ctx.tp_copy(rms_norm(p["norm2"], x, cfg.norm_eps))
+            x = x + ffn_apply(p["mlp"], h2, ctx, act=cfg.act, dtype=cfg.dtype)
+        return x, {"h": st.h, "conv": st.conv}
+    if desc.kind == "mlstm":
+        out, st = xlstm_mod.mlstm_decode(
+            p["mix"], h, xlstm_mod.MLSTMState(cache["C"], cache["n"], cache["m"]),
+            cfg.num_heads, ctx, cfg.dtype)
+        return x + out, {"C": st.C, "n": st.n, "m": st.m}
+    if desc.kind == "slstm":
+        out, st = xlstm_mod.slstm_decode(
+            p["mix"], h, xlstm_mod.SLSTMState(cache["h"], cache["c"],
+                                              cache["n"], cache["m"]),
+            cfg.num_heads, ctx, cfg.dtype)
+        return x + out, {"h": st.h, "c": st.c, "n": st.n, "m": st.m}
+    raise ValueError(desc.kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack defs / apply
+# ---------------------------------------------------------------------------
+
+
+def stack_defs(cfg: ModelConfig, tp: int):
+    group, n_groups, tail = plan_stack(cfg)
+    dims = attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, tp)
+    gdefs = {f"l{j}": layer_defs(cfg, desc, dims, tp) for j, desc in enumerate(group)}
+    out = {"groups": pdefs.stack_defs(gdefs, n_groups)}
+    if tail:
+        out["tail"] = {f"t{j}": layer_defs(cfg, desc, dims, tp)
+                       for j, desc in enumerate(tail)}
+    return out
+
+
+def stack_cache_defs(cfg: ModelConfig, tp: int, batch: int, max_len: int,
+                     *, seq_sharded: bool):
+    group, n_groups, tail = plan_stack(cfg)
+    dims = attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, tp)
+    gdefs = {f"l{j}": layer_cache_defs(cfg, desc, dims, batch, max_len,
+                                       seq_sharded=seq_sharded)
+             for j, desc in enumerate(group)}
+    out = {"groups": pdefs.stack_defs(gdefs, n_groups)}
+    if tail:
+        out["tail"] = {f"t{j}": layer_cache_defs(cfg, desc, dims, batch, max_len,
+                                                 seq_sharded=seq_sharded)
+                       for j, desc in enumerate(tail)}
+    return out
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def stack_train(p, x, cfg: ModelConfig, ctx: ParallelContext, *,
+                remat_policy: str = "full", chunk: int = 2048):
+    """Run all layers over a full sequence. Returns (x, total_aux_loss)."""
+    group, n_groups, tail = plan_stack(cfg)
+    dims = attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                     max(ctx.tp, 1))
+
+    def group_fn(x, gp):
+        aux = jnp.zeros((), jnp.float32)
+        for j, desc in enumerate(group):
+            x, a = layer_train(gp[f"l{j}"], x, cfg, desc, dims, ctx, chunk)
+            aux = aux + a
+        return x, aux
+
+    gfn = _remat(group_fn, remat_policy)
+
+    def body(carry, gp):
+        x, aux = carry
+        x, a = gfn(x, gp)
+        return (x, aux + a), None
+
+    # aux carry must match the body's varying-manual-axes type (vma):
+    # derive it from x so it inherits the client/data-varying tag.
+    aux0 = jnp.zeros_like(x, shape=(), dtype=jnp.float32)
+    (x, aux), _ = lax.scan(body, (x, aux0), p["groups"])
+    for j, desc in enumerate(tail):
+        x, a = layer_train(p["tail"][f"t{j}"], x, cfg, desc, dims, ctx, chunk)
+        aux = aux + a
+    return x, aux
+
+
+def stack_prefill(p, x, cfg: ModelConfig, ctx: ParallelContext, *,
+                  max_len: int, chunk: int = 2048):
+    """Full-sequence forward emitting decode caches. Returns (x, caches)."""
+    group, n_groups, tail = plan_stack(cfg)
+    dims = attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                     max(ctx.tp, 1))
+
+    def body(x, gp):
+        cs = {}
+        for j, desc in enumerate(group):
+            x, c = layer_prefill(gp[f"l{j}"], x, cfg, desc, dims, ctx,
+                                 max_len, chunk)
+            cs[f"l{j}"] = c
+        return x, cs
+
+    x, group_caches = lax.scan(body, x, p["groups"])
+    caches = {"groups": group_caches}
+    if tail:
+        ct = {}
+        for j, desc in enumerate(tail):
+            x, c = layer_prefill(p["tail"][f"t{j}"], x, cfg, desc, dims, ctx,
+                                 max_len, chunk)
+            ct[f"t{j}"] = c
+        caches["tail"] = ct
+    return x, caches
+
+
+def stack_decode(p, x, caches, pos, cfg: ModelConfig, ctx: ParallelContext,
+                 max_len: int):
+    """One-token decode through the whole stack. Returns (x, new_caches)."""
+    group, n_groups, tail = plan_stack(cfg)
+    dims = attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                     max(ctx.tp, 1))
+
+    def body(x, inp):
+        gp, gc = inp
+        ncs = {}
+        for j, desc in enumerate(group):
+            x, nc = layer_decode(gp[f"l{j}"], x, gc[f"l{j}"], pos, cfg, desc,
+                                 dims, ctx, max_len)
+            ncs[f"l{j}"] = nc
+        return x, ncs
+
+    x, new_group_caches = lax.scan(body, x, (p["groups"], caches["groups"]))
+    new_caches = {"groups": new_group_caches}
+    if tail:
+        nt = {}
+        for j, desc in enumerate(tail):
+            x, nc = layer_decode(p["tail"][f"t{j}"], x, caches["tail"][f"t{j}"],
+                                 pos, cfg, desc, dims, ctx, max_len)
+            nt[f"t{j}"] = nc
+        new_caches["tail"] = nt
+    return x, new_caches

@@ -1,0 +1,301 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM runs in two equivalent forms (tested against each other):
+  * parallel/quadratic for train & prefill — decay matrix D_ij built from
+    cumulative log-forget-gates, q-chunked like attention;
+  * recurrent for decode — stabilized (C, n, m) state per head.
+
+Sharding (DESIGN.md): mLSTM value/output dim is column-sharded over "model"
+(C and n shard on the value axis); q/k and the gate projections are
+replicated. The sLSTM core (4-head block-diagonal recurrence, d=1024) is
+replicated over "model" — it does not shard 16 ways — while its FFN shards
+normally; the cost is documented in the roofline notes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import XLSTMConfig
+from repro.models import params as pdefs
+from repro.models.layers import cast
+from repro.sharding.rules import ParallelContext, pad_to
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(d_model: int, num_heads: int, x: XLSTMConfig):
+    di = pad_to(int(d_model * x.mlstm_proj_factor), 128)
+    dh = di // num_heads
+    # v / o / down are sharded on the PER-HEAD value dim (so every shard
+    # keeps all heads — the decay matrix is per-head and must align with
+    # the unsharded q/k head layout).
+    return {
+        "w_q": pdefs.linear(d_model, di),
+        "w_k": pdefs.linear(d_model, di),
+        "w_v": pdefs.ParamDef((d_model, num_heads, dh),
+                              pdefs.P(None, None, "model"),
+                              scale=d_model ** -0.5),
+        "w_i": pdefs.linear(d_model, num_heads),
+        "w_f": pdefs.linear(d_model, num_heads),
+        "w_o": pdefs.ParamDef((d_model, num_heads, dh),
+                              pdefs.P(None, None, "model"),
+                              scale=d_model ** -0.5),
+        "w_down": pdefs.ParamDef((num_heads, dh, d_model),
+                                 pdefs.P(None, "model", None),
+                                 scale=di ** -0.5),
+    }
+
+
+def _mlstm_qkvgates(p, x, num_heads, dtype):
+    B, S, _ = x.shape
+    di = p["w_q"].shape[1]
+    dh = di // num_heads
+    q = (x @ cast(p["w_q"], dtype)).reshape(B, S, num_heads, dh)
+    k = (x @ cast(p["w_k"], dtype)).reshape(B, S, num_heads, dh)
+    v = jnp.einsum("bsd,dhv->bshv", x, cast(p["w_v"], dtype))
+    log_i = (x @ cast(p["w_i"], dtype)).astype(jnp.float32)           # (B,S,nh)
+    log_f = jax.nn.log_sigmoid((x @ cast(p["w_f"], dtype)).astype(jnp.float32))
+    return q, k, v, log_i, log_f, dh
+
+
+def mlstm_train(p, x, num_heads: int, ctx: ParallelContext,
+                dtype="bfloat16", chunk: int = 2048,
+                return_state: bool = False):
+    """Parallel (quadratic) stabilized mLSTM. x: (B,S,d)."""
+    B, S, d = x.shape
+    q, k, v, log_i, log_f, dh = _mlstm_qkvgates(p, x, num_heads, dtype)
+    F = jnp.cumsum(log_f, axis=1)                                     # (B,S,nh)
+    scale = dh ** -0.5
+
+    n_chunks = max(S // chunk, 1)
+    cs = S // n_chunks
+
+    def body(_, ci):
+        qi = lax.dynamic_slice_in_dim(q, ci * cs, cs, axis=1)
+        Fi = lax.dynamic_slice_in_dim(F, ci * cs, cs, axis=1)
+        ipos = ci * cs + jnp.arange(cs)
+        # D_ij = F_i - F_j + log_i_j   (j <= i)
+        D = Fi[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+        mask = ipos[:, None] >= jnp.arange(S)[None, :]
+        D = jnp.where(mask[None, :, :, None], D, NEG_INF)
+        m = jnp.max(D, axis=2)                                        # (B,cs,nh)
+        w = jnp.exp(D - m[:, :, None, :])
+        s = jnp.einsum("bihd,bjhd->bijh", qi, k).astype(jnp.float32) * scale
+        sw = s * w
+        eta = jnp.sum(sw, axis=2)                                     # (B,cs,nh)
+        denom = jnp.maximum(jnp.abs(eta), jnp.exp(-m))
+        h = jnp.einsum("bijh,bjhv->bihv", sw.astype(v.dtype), v)
+        return None, h / denom[..., None].astype(v.dtype)
+
+    _, hs = lax.scan(body, None, jnp.arange(n_chunks))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(
+        B, S, num_heads, -1)                           # (B,S,nh,dhv_local)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhv->bshv", x, cast(p["w_o"], dtype)))
+    out = jnp.einsum("bshv,hvd->bsd", h.astype(jnp.dtype(dtype)) * o,
+                     cast(p["w_down"], dtype))
+    out = ctx.psum_model(out)
+    if return_state:
+        # final recurrent state: weights w_j = exp(F_S - F_j + log_i_j - m_S)
+        rel = F[:, -1:, :] - F + log_i                  # (B,S,nh)
+        m_fin = jnp.max(rel, axis=1)                    # (B,nh)
+        wgt = jnp.exp(rel - m_fin[:, None, :])
+        C = jnp.einsum("bsh,bshk,bshv->bhkv", wgt, k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+        n = jnp.einsum("bsh,bshk->bhk", wgt, k.astype(jnp.float32))
+        return out, MLSTMState(C=C, n=n, m=m_fin)
+    return out
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, nh, dh_k, dh_v_local)
+    n: jax.Array   # (B, nh, dh_k)
+    m: jax.Array   # (B, nh)
+
+
+def mlstm_train_chunkwise(p, x, num_heads: int, ctx: ParallelContext,
+                          dtype="bfloat16", chunk: int = 256,
+                          return_state: bool = False):
+    """Chunkwise-recurrent mLSTM (xLSTM paper §A parallel-chunkwise form).
+
+    O(S·c) score matrices instead of O(S²): within a chunk the quadratic
+    stabilized form runs locally; across chunks a stabilized (C, n, m) state
+    carries the prefix — identical numerics to ``mlstm_train`` (tested).
+    """
+    B, S, d = x.shape
+    q, k, v, log_i, log_f, dh = _mlstm_qkvgates(p, x, num_heads, dtype)
+    dhv = v.shape[-1]
+    scale = dh ** -0.5
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    def resh(a):
+        return a.reshape(B, nc, c, *a.shape[2:]).transpose(1, 0, 2,
+                                                           *range(3, a.ndim + 1))
+
+    qc, kc, vc = resh(q), resh(k), resh(v)                # (nc,B,c,nh,*)
+    lic, lfc = resh(log_i), resh(log_f)                   # (nc,B,c,nh)
+
+    # carry vma must match the body outputs: C mixes in the model-sharded v
+    st0 = MLSTMState(
+        C=jnp.zeros_like(v, shape=(B, num_heads, dh, dhv), dtype=jnp.float32),
+        n=jnp.zeros_like(log_i, shape=(B, num_heads, dh)),
+        m=jnp.full_like(log_i, -1e30, shape=(B, num_heads)))
+
+    def body(st, inp):
+        qi, ki, vi, li, lf = inp                          # (B,c,nh,*)
+        Fl = jnp.cumsum(lf, axis=1)                       # (B,c,nh)
+        Ftot = Fl[:, -1]                                  # (B,nh)
+        # intra-chunk decay D_ij = Fl_i - Fl_j + li_j (j<=i)
+        D = Fl[:, :, None, :] - Fl[:, None, :, :] + li[:, None, :, :]
+        mask = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+        D = jnp.where(mask[None, :, :, None], D, NEG_INF)
+        m_intra = jnp.max(D, axis=2)                      # (B,c,nh)
+        m_inter = Fl + st.m[:, None, :]                   # (B,c,nh)
+        m_row = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(D - m_row[:, :, None, :])
+        s = jnp.einsum("bihd,bjhd->bijh", qi, ki).astype(jnp.float32) * scale
+        sw = s * w
+        num = jnp.einsum("bijh,bjhv->bihv", sw.astype(vi.dtype), vi)
+        eta = jnp.sum(sw, axis=2)                         # (B,c,nh)
+        # inter-chunk (prefix) contribution
+        wi = jnp.exp(m_inter - m_row)                     # (B,c,nh)
+        q32 = qi.astype(jnp.float32) * scale
+        num = num.astype(jnp.float32) + \
+            wi[..., None] * jnp.einsum("bihd,bhdv->bihv", q32, st.C)
+        eta = eta + wi * jnp.einsum("bihd,bhd->bih", q32, st.n)
+        denom = jnp.maximum(jnp.abs(eta), jnp.exp(-m_row))
+        h = (num / denom[..., None]).astype(vi.dtype)     # (B,c,nh,dhv)
+        # state update (stabilized)
+        rel = Ftot[:, None, :] - Fl + li                  # (B,c,nh)
+        m_new = jnp.maximum(Ftot + st.m, jnp.max(rel, axis=1))
+        wk = jnp.exp(rel - m_new[:, None, :])
+        carry_scale = jnp.exp(Ftot + st.m - m_new)
+        C2 = carry_scale[..., None, None] * st.C + jnp.einsum(
+            "bjh,bjhd,bjhv->bhdv", wk, ki.astype(jnp.float32),
+            vi.astype(jnp.float32))
+        n2 = carry_scale[..., None] * st.n + jnp.einsum(
+            "bjh,bjhd->bhd", wk, ki.astype(jnp.float32))
+        return MLSTMState(C=C2, n=n2, m=m_new), h
+
+    st_fin, hs = lax.scan(body, st0, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, num_heads, -1)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhv->bshv", x, cast(p["w_o"], dtype)))
+    out = jnp.einsum("bshv,hvd->bsd", h.astype(jnp.dtype(dtype)) * o,
+                     cast(p["w_down"], dtype))
+    out = ctx.psum_model(out)
+    if return_state:
+        return out, st_fin
+    return out
+
+
+def mlstm_decode(p, x, state: MLSTMState, num_heads: int,
+                 ctx: ParallelContext, dtype="bfloat16"):
+    """Stabilized recurrent step. x: (B,1,d)."""
+    B = x.shape[0]
+    q, k, v, log_i, log_f, dh = _mlstm_qkvgates(p, x, num_heads, dtype)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                # (B,nh,dh)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]            # (B,nh)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    fprime = jnp.exp(log_f + state.m - m_new)
+    iprime = jnp.exp(log_i - m_new)
+    C = fprime[..., None, None] * state.C + \
+        iprime[..., None, None] * (k[..., :, None] * v[..., None, :]).astype(state.C.dtype)
+    n = fprime[..., None] * state.n + iprime[..., None] * k.astype(state.n.dtype)
+    scale = dh ** -0.5
+    hnum = jnp.einsum("bhkv,bhk->bhv", C, q.astype(C.dtype) * scale)
+    eta = jnp.einsum("bhk,bhk->bh", n, q.astype(n.dtype) * scale)
+    denom = jnp.maximum(jnp.abs(eta), jnp.exp(-m_new))
+    h = (hnum / denom[..., None])[:, None]             # (B,1,nh,dhv_local)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhv->bshv", x, cast(p["w_o"], dtype)))
+    out = jnp.einsum("bshv,hvd->bsd", h.astype(jnp.dtype(dtype)) * o,
+                     cast(p["w_down"], dtype))
+    return ctx.psum_model(out), MLSTMState(C=C, n=n, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(d_model: int, num_heads: int, x: XLSTMConfig):
+    dh = d_model // num_heads
+    dff = pad_to(int(d_model * x.slstm_proj_factor), 128)
+    from repro.models.layers import ffn_defs
+    return {
+        "w_in": pdefs.linear(d_model, 4 * d_model),                  # i,f,z,o
+        "r": pdefs.ParamDef((4, num_heads, dh, dh), pdefs.P(), scale=dh ** -0.5),
+        "b": pdefs.bias(4 * d_model),
+        "norm": pdefs.norm_scale(d_model),
+        "ffn": ffn_defs(d_model, dff),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, d)
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def _slstm_step(p4r, pre, st: SLSTMState, num_heads: int):
+    """pre: (B,4d) input preactivations; p4r: (4,nh,dh,dh) recurrent mats."""
+    B, d4 = pre.shape
+    d = d4 // 4
+    dh = d // num_heads
+    hh = st.h.reshape(B, num_heads, dh)
+    rec = jnp.einsum("bhk,ghkl->bghl", hh, p4r).reshape(B, 4, d)
+    z = pre.reshape(B, 4, d) + rec
+    it, ft, zt, ot = z[:, 0], z[:, 1], z[:, 2], z[:, 3]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + st.m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(jax.nn.log_sigmoid(ft) + st.m - m_new)
+    c = fp * st.c + ip * jnp.tanh(zt)
+    n = fp * st.n + ip
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(h=h, c=c, n=n, m=m_new)
+
+
+def slstm_train(p, x, num_heads: int, ctx: ParallelContext, dtype="bfloat16",
+                return_state: bool = False):
+    """Sequential sLSTM over the sequence. x: (B,S,d). Core replicated."""
+    from repro.models.layers import ffn_apply, rms_norm
+    B, S, d = x.shape
+    pre = (x @ cast(p["w_in"], dtype) + cast(p["b"], dtype)).astype(jnp.float32)
+    # zeros_like(pre, ...) keeps the vma (client/data-varying) tag so the
+    # scan carry types match the body outputs under shard_map.
+    st0 = SLSTMState(h=jnp.zeros_like(pre, shape=(B, d)),
+                     c=jnp.zeros_like(pre, shape=(B, d)),
+                     n=jnp.zeros_like(pre, shape=(B, d)),
+                     m=jnp.full_like(pre, -1e30, shape=(B, d)))
+    r = p["r"].astype(jnp.float32)
+
+    def body(st, pre_t):
+        st2 = _slstm_step(r, pre_t, st, num_heads)
+        return st2, st2.h
+
+    st_fin, hs = lax.scan(body, st0, pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(jnp.dtype(dtype))
+    h = rms_norm(p["norm"], h)
+    out = ffn_apply(p["ffn"], h, ctx, dtype=dtype)
+    if return_state:
+        return out, st_fin
+    return out
+
+
+def slstm_decode(p, x, state: SLSTMState, num_heads: int,
+                 ctx: ParallelContext, dtype="bfloat16"):
+    from repro.models.layers import ffn_apply, rms_norm
+    pre = (x[:, 0] @ cast(p["w_in"], dtype) + cast(p["b"], dtype)).astype(jnp.float32)
+    st = _slstm_step(p["r"].astype(jnp.float32), pre, state, num_heads)
+    h = rms_norm(p["norm"], st.h.astype(jnp.dtype(dtype)))[:, None, :]
+    return ffn_apply(p["ffn"], h, ctx, dtype=dtype), st

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    ParallelContext,
+    AttnDims,
+    attn_dims,
+    pad_to,
+    padded_vocab,
+)

@@ -1,0 +1,25 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real device. Multi-device sharding tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (test_sharding.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                       dtype="float32")

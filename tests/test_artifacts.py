@@ -1,0 +1,53 @@
+"""Integrity of the shipped dry-run artifact: the full 80-case matrix
+(10 archs x 4 shapes x 2 meshes) must be present with ok/justified-skip
+statuses and well-formed roofline terms."""
+import json
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+@pytest.fixture(scope="module")
+def results():
+    if not os.path.exists(RESULTS):
+        pytest.skip("results/dryrun.json not generated in this checkout")
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def test_full_matrix_present(results):
+    from repro.configs import ARCH_IDS, INPUT_SHAPES
+    missing = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for arch in ARCH_IDS:
+            for shape in INPUT_SHAPES:
+                if f"baseline/{mesh}/{arch}/{shape}" not in results:
+                    missing.append((mesh, arch, shape))
+    assert not missing, missing
+
+
+def test_statuses_ok_or_justified_skip(results):
+    for k, v in results.items():
+        if not k.startswith("baseline/"):
+            continue
+        assert v["status"] in ("ok", "skipped"), (k, v.get("error", ""))
+        if v["status"] == "skipped":
+            assert "hubert" in k and ("decode" in k or "long" in k), k
+            assert "encoder-only" in v["reason"]
+
+
+def test_roofline_terms_well_formed(results):
+    for k, v in results.items():
+        if not k.startswith("baseline/") or v["status"] != "ok":
+            continue
+        rl = v["roofline"]
+        assert rl["compute_s"] > 0, k
+        assert rl["memory_s"] > 0, k
+        assert rl["dominant"] in ("compute", "memory", "collective"), k
+        assert 0 < rl["useful_ratio"] < 10, (k, rl["useful_ratio"])
+        # train steps must show client/TP collectives
+        if k.endswith("train_4k"):
+            assert rl["collective_s"] > 0, k

@@ -1,0 +1,103 @@
+"""Compressor properties (paper Assumption 4.14 and Remarks 4.15/4.16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compressors import (make_blocktopk, make_compressor,
+                                    make_identity, make_int8, make_randk,
+                                    make_sign, make_topk)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _vec(seed, d):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=d),
+                       jnp.float32)
+
+
+@given(st.integers(0, 10**6), st.integers(8, 400),
+       st.sampled_from([1 / 2, 1 / 4, 1 / 8, 1 / 64]))
+def test_topk_contraction(seed, d, ratio):
+    """‖C(x)−x‖ <= sqrt(1−k/d)·‖x‖ (Remark 4.15, with k the realized count)."""
+    x = _vec(seed, d)
+    comp = make_topk(ratio)
+    k = max(1, int(round(ratio * d)))
+    hat = comp.compress(x)
+    resid = float(jnp.linalg.norm(hat - x))
+    bound = float(np.sqrt(max(1 - k / d, 0.0)) * jnp.linalg.norm(x))
+    assert resid <= bound + 1e-5
+    assert int(jnp.sum(hat != 0)) <= k
+
+
+@given(st.integers(0, 10**6), st.integers(8, 300))
+def test_sign_contraction(seed, d):
+    """q = sqrt(1 − ‖x‖₁²/(d‖x‖²)) exactly (Remark 4.16)."""
+    x = _vec(seed, d)
+    comp = make_sign()
+    hat = comp.compress(x)
+    resid = float(jnp.linalg.norm(hat - x))
+    q = comp.q_bound(x)
+    assert resid <= q * float(jnp.linalg.norm(x)) + 1e-4
+
+
+@given(st.integers(0, 10**6), st.integers(10, 500),
+       st.sampled_from([1 / 4, 1 / 16]), st.sampled_from([16, 64]))
+def test_blocktopk_contraction(seed, d, ratio, block):
+    """Blockwise top-k preserves the global q = sqrt(1-r) bound."""
+    x = _vec(seed, d)
+    comp = make_blocktopk(ratio, block)
+    hat = comp.compress(x)
+    resid = float(jnp.linalg.norm(hat - x))
+    bound = float(np.sqrt(1 - ratio) * jnp.linalg.norm(x)) * (1 + 1e-5)
+    # per-block exact-k keeps >= global k elements; bound still holds per block
+    assert resid <= bound + 1e-5
+
+
+def test_topk_selects_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -1.5])
+    hat = make_topk(3 / 8).compress(x)
+    nz = set(np.nonzero(np.asarray(hat))[0].tolist())
+    assert nz == {1, 3, 7}
+    assert np.allclose(np.asarray(hat)[[1, 3, 7]], [-5.0, 3.0, -1.5])
+
+
+def test_sign_formula():
+    x = jnp.asarray([1.0, -2.0, 3.0, -4.0])
+    hat = make_sign().compress(x)
+    assert np.allclose(np.asarray(hat), 2.5 * np.sign(np.asarray(x)))
+
+
+def test_identity_and_int8():
+    x = _vec(0, 100)
+    assert np.allclose(make_identity().compress(x), x)
+    h = make_int8().compress(x)
+    assert float(jnp.max(jnp.abs(h - x))) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+def test_randk_needs_rng_and_keeps_k():
+    x = _vec(0, 64)
+    comp = make_randk(1 / 4)
+    with pytest.raises(AssertionError):
+        comp.compress(x)
+    h = comp.compress(x, jax.random.PRNGKey(0))
+    assert int(jnp.sum(h != 0)) <= 16
+
+
+def test_bits_accounting_table1():
+    """Paper Table 1 one-way costs."""
+    d = 6400
+    assert make_sign().bits_per_message(d) == 32 + d
+    assert make_topk(1 / 64).bits_per_message(d) == 64 * 100
+    assert make_identity().bits_per_message(d) == 32 * d
+
+
+def test_make_compressor_registry():
+    for name in ["topk", "blocktopk", "sign", "packedsign", "randk", "int8",
+                 "none"]:
+        assert make_compressor(name, 1 / 8).name
+    with pytest.raises(ValueError):
+        make_compressor("bogus")

@@ -1,0 +1,63 @@
+"""Error-feedback invariants (paper Algorithm 2 lines 12-16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compressors import make_sign, make_topk
+from repro.core.error_feedback import ef_compress, ef_compress_masked
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _tree(seed, shapes=((8, 4), (13,))):
+    r = np.random.default_rng(seed)
+    return {f"w{i}": jnp.asarray(r.normal(size=s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+@given(st.integers(0, 10**6))
+def test_ef_identity(seed):
+    """e' == (Δ + e) − Δ̂ exactly, per leaf."""
+    delta, err = _tree(seed), _tree(seed + 1)
+    comp = make_topk(1 / 4)
+    hat, new_err = ef_compress(comp, delta, err)
+    for k in delta:
+        tot = delta[k] + err[k]
+        assert np.allclose(np.asarray(hat[k] + new_err[k]), np.asarray(tot),
+                           atol=1e-6)
+
+
+@given(st.integers(0, 10**5), st.integers(2, 12))
+def test_ef_telescoping(seed, T):
+    """Σ_t Δ̂_t = Σ_t Δ_t + e_1 − e_{T+1} (compression error never lost)."""
+    comp = make_sign()
+    r = np.random.default_rng(seed)
+    err = {"w": jnp.zeros(17)}
+    total_hat = jnp.zeros(17)
+    total_delta = jnp.zeros(17)
+    for _ in range(T):
+        delta = {"w": jnp.asarray(r.normal(size=17), jnp.float32)}
+        hat, err = ef_compress(comp, delta, err)
+        total_hat += hat["w"]
+        total_delta += delta["w"]
+    assert np.allclose(np.asarray(total_hat + err["w"]),
+                       np.asarray(total_delta), atol=1e-4)
+
+
+def test_stale_error_partial_participation():
+    """Non-participating clients keep e unchanged and contribute zero."""
+    comp = make_topk(1 / 2)
+    delta, err = _tree(0), _tree(1)
+    hat, new_err = ef_compress_masked(comp, delta, err,
+                                      jnp.float32(0.0))
+    for k in delta:
+        assert np.allclose(np.asarray(hat[k]), 0.0)
+        assert np.allclose(np.asarray(new_err[k]), np.asarray(err[k]))
+    hat1, err1 = ef_compress_masked(comp, delta, err, jnp.float32(1.0))
+    hat2, err2 = ef_compress(comp, delta, err)
+    for k in delta:
+        assert np.allclose(np.asarray(hat1[k]), np.asarray(hat2[k]))
+        assert np.allclose(np.asarray(err1[k]), np.asarray(err2[k]))

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compressors import make_compressor
+from repro.kernels import ref
+from repro.kernels.fedams_update import fedams_update
+from repro.kernels.ops import KernelImpl
+from repro.kernels.sign_ef import sign_ef
+from repro.kernels.topk_ef import topk_ef
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _pair(seed, n):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.normal(size=n), jnp.float32),
+            jnp.asarray(r.normal(size=n) * 0.3, jnp.float32))
+
+
+@pytest.mark.parametrize("n,block,k", [(256, 64, 4), (1024, 128, 16),
+                                       (4096, 2048, 32), (8192, 1024, 1)])
+def test_topk_ef_matches_ref(n, block, k):
+    x, e = _pair(0, n)
+    h1, e1 = topk_ef(x, e, k=k, block=block)
+    h2, e2 = ref.topk_ef_ref(x, e, k, block)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-6)
+
+
+@given(st.integers(0, 10**6), st.sampled_from([64, 128, 256]),
+       st.integers(1, 16))
+def test_topk_ef_property(seed, block, k):
+    x, e = _pair(seed, 4 * block)
+    h1, e1 = topk_ef(x, e, k=k, block=block)
+    h2, e2 = ref.topk_ef_ref(x, e, k, block)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-6)
+    # EF identity holds inside the kernel
+    np.testing.assert_allclose(np.asarray(h1 + e1), np.asarray(x + e),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("n,block", [(256, 64), (2048, 2048), (8192, 1024)])
+def test_sign_ef_matches_ref(n, block):
+    x, e = _pair(1, n)
+    h1, e1 = sign_ef(x, e, block=block)
+    h2, e2 = ref.sign_ef_ref(x, e)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("option", [1, 2])
+@pytest.mark.parametrize("n,block", [(512, 128), (4096, 4096)])
+def test_fedams_update_matches_ref(option, n, block):
+    r = np.random.default_rng(2)
+    arrs = [jnp.asarray(np.abs(r.normal(size=n)) if i in (2, 3)
+                        else r.normal(size=n), jnp.float32)
+            for i in range(5)]
+    kw = dict(eta=0.7, beta1=0.9, beta2=0.99, eps=1e-3, option=option)
+    got = fedams_update(*arrs, block=block, **kw)
+    want = ref.fedams_update_ref(*arrs, **kw)
+    for g, w, nm in zip(got, want, "x m v vhat".split()):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5,
+                                   atol=1e-6, err_msg=nm)
+
+
+@given(st.integers(0, 10**6))
+def test_fedams_kernel_vhat_monotone(seed):
+    r = np.random.default_rng(seed)
+    n = 256
+    x = jnp.zeros(n)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    vh = jnp.zeros(n)
+    for _ in range(4):
+        d = jnp.asarray(r.normal(size=n) * 0.1, jnp.float32)
+        x, m, v, vh2 = fedams_update(x, m, v, vh, d, eta=1.0, beta1=0.9,
+                                     beta2=0.99, eps=1e-3, option=1, block=128)
+        assert (np.asarray(vh2) >= np.asarray(vh) - 1e-12).all()
+        assert (np.asarray(vh2) >= 1e-3 - 1e-12).all()
+        vh = vh2
+
+
+def test_kernel_impl_padding_paths():
+    """Non-multiple leaf sizes go through the zero-padding path exactly."""
+    ki = KernelImpl(block=128)
+    r = np.random.default_rng(3)
+    for n in (100, 128, 300):
+        x = jnp.asarray(r.normal(size=n), jnp.float32)
+        e = jnp.asarray(r.normal(size=n) * 0.2, jnp.float32)
+        h, ne = ki.ef_compress_leaf("sign", 1.0, x, e)
+        h2, e2 = ref.sign_ef_ref(x, e)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h2), rtol=1e-4,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ne), np.asarray(e2), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_kernel_impl_tree_mask():
+    ki = KernelImpl(block=64)
+    comp = make_compressor("topk", 1 / 4)
+    tree = {"a": jnp.ones((8, 8)), "b": jnp.arange(10.0)}
+    err = jax.tree.map(jnp.zeros_like, tree)
+    hat, ne = ki.ef_compress_tree(comp, tree, err, jnp.float32(0.0))
+    assert all(float(jnp.abs(l).max()) == 0 for l in jax.tree.leaves(hat))

@@ -1,0 +1,99 @@
+"""Recurrent mixers against naive step-by-step references, plus the
+chunkwise-recurrent mLSTM equivalence (the §Perf optimization must be a
+pure re-bracketing of the same math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RGLRUConfig, XLSTMConfig
+from repro.models import params as pdefs
+from repro.models.rglru import RGLRUState, rglru_decode, rglru_defs, rglru_train
+from repro.models.xlstm import (MLSTMState, mlstm_decode, mlstm_defs,
+                                mlstm_train, mlstm_train_chunkwise)
+from repro.sharding.rules import ParallelContext
+
+CTX = ParallelContext()
+
+
+def test_rglru_train_matches_stepwise_decode():
+    r = RGLRUConfig(lru_width=32, conv_width=4)
+    p = pdefs.init_params(rglru_defs(32, r), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
+    full = rglru_train(p, x, r, CTX, "float32")
+    st = RGLRUState(h=jnp.zeros((2, 32)),
+                    conv=jnp.zeros((2, 3, 32)))
+    outs = []
+    for t in range(10):
+        o, st = rglru_decode(p, x[:, t:t + 1], st, r, CTX, "float32")
+        outs.append(o[:, 0])
+    step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), atol=1e-4)
+
+
+def test_rglru_decay_in_unit_interval():
+    """a_t = exp(-c softplus(Λ) σ(gate)) must be in (0, 1]."""
+    r = RGLRUConfig(lru_width=16)
+    p = pdefs.init_params(rglru_defs(16, r), jax.random.PRNGKey(0))
+    from repro.models.rglru import _gates
+    xc = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16)) * 3
+    a, b = _gates(p, xc, r)
+    assert float(a.min()) > 0.0 and float(a.max()) <= 1.0
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mlstm_chunkwise_equals_quadratic(chunk):
+    p = pdefs.init_params(mlstm_defs(64, 4, XLSTMConfig()),
+                          jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    a = mlstm_train(p, x, 4, CTX, "float32")
+    b = mlstm_train_chunkwise(p, x, 4, CTX, "float32", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    _, sa = mlstm_train(p, x, 4, CTX, "float32", return_state=True)
+    _, sb = mlstm_train_chunkwise(p, x, 4, CTX, "float32", chunk=chunk,
+                                  return_state=True)
+    np.testing.assert_allclose(np.asarray(sa.C), np.asarray(sb.C), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.m), np.asarray(sb.m), atol=1e-4)
+
+
+def test_mlstm_train_matches_stepwise_decode():
+    p = pdefs.init_params(mlstm_defs(32, 4, XLSTMConfig()),
+                          jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 32))
+    full = mlstm_train(p, x, 4, CTX, "float32")
+    di = p["w_q"].shape[1]
+    dh = di // 4
+    st = MLSTMState(C=jnp.zeros((1, 4, dh, dh)), n=jnp.zeros((1, 4, dh)),
+                    m=jnp.full((1, 4), -1e30))
+    outs = []
+    for t in range(8):
+        o, st = mlstm_decode(p, x[:, t:t + 1], st, 4, CTX, "float32")
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)), atol=1e-4)
+
+
+def test_weighted_sampling_respects_weights():
+    from repro.core.sampling import weighted_participation_mask
+    w = jnp.asarray([10.0, 10.0, 0.001, 0.001])
+    hits = np.zeros(4)
+    for s in range(200):
+        m = weighted_participation_mask(jax.random.PRNGKey(s), w, 2)
+        hits += np.asarray(m)
+    assert hits[0] > 150 and hits[1] > 150
+    assert hits[2] < 50 and hits[3] < 50
+
+
+def test_fedadagrad_accumulates_variance():
+    from repro.configs.base import FedConfig
+    from repro.core.server_opt import init_server_state, server_update
+    fed = FedConfig(algorithm="fedadagrad", eta=0.1)
+    x = jnp.zeros(4)
+    st = init_server_state(x)
+    d = jnp.ones(4)
+    prev = np.zeros(4)
+    for _ in range(3):
+        x, st = server_update(fed, st, x, d)
+        v = np.asarray(st.v)
+        assert (v > prev).all()   # strictly accumulating
+        prev = v

@@ -1,0 +1,90 @@
+"""Server optimizer semantics: FedAMS options, baselines, v̂ monotonicity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core.server_opt import init_server_state, server_update
+
+
+def _mk(algo, **kw):
+    return FedConfig(algorithm=algo, eta=kw.pop("eta", 1.0),
+                     beta1=kw.pop("beta1", 0.9), beta2=kw.pop("beta2", 0.99),
+                     eps=kw.pop("eps", 1e-3), **kw)
+
+
+def _steps(fed, T=10, seed=0, d=32):
+    r = np.random.default_rng(seed)
+    x = jnp.zeros(d)
+    st = init_server_state(x)
+    traj = []
+    for _ in range(T):
+        delta = jnp.asarray(r.normal(size=d) * 0.1, jnp.float32)
+        x, st = server_update(fed, st, x, delta)
+        traj.append((np.asarray(x), st))
+    return traj
+
+
+def test_fedavg_is_plain_average_step():
+    fed = _mk("fedavg", eta=1.0)
+    x = jnp.zeros(4)
+    st = init_server_state(x)
+    x2, _ = server_update(fed, st, x, jnp.asarray([1.0, -2.0, 0.5, 0.0]))
+    assert np.allclose(np.asarray(x2), [1.0, -2.0, 0.5, 0.0])
+
+
+def test_vhat_monotone_both_options():
+    for opt in (1, 2):
+        fed = dataclasses.replace(_mk("fedams"), option=opt)
+        prev = None
+        for _, st in _steps(fed):
+            vh = np.asarray(st.vhat)
+            if prev is not None:
+                assert (vh >= prev - 1e-12).all()
+            prev = vh
+
+
+def test_option1_vhat_floor_is_eps():
+    fed = _mk("fedams")
+    _, st = _steps(fed, T=1)[0]
+    assert (np.asarray(st.vhat) >= fed.eps - 1e-12).all()
+
+
+def test_option2_matches_amsgrad_reference():
+    """Option 2 ≡ AMSGrad on pseudo-gradients (numpy reference)."""
+    fed = dataclasses.replace(_mk("fedamsgrad"), option=2)
+    r = np.random.default_rng(1)
+    d = 16
+    x = np.zeros(d)
+    m = np.zeros(d)
+    v = np.zeros(d)
+    vh = np.zeros(d)
+    xj = jnp.zeros(d)
+    st = init_server_state(xj)
+    for _ in range(5):
+        delta = r.normal(size=d).astype(np.float32) * 0.1
+        m = 0.9 * m + 0.1 * delta
+        v = 0.99 * v + 0.01 * delta * delta
+        vh = np.maximum(vh, v)
+        x = x + 1.0 * m / (np.sqrt(vh) + 1e-3)
+        xj, st = server_update(fed, st, xj, jnp.asarray(delta))
+        assert np.allclose(np.asarray(xj), x, atol=1e-5)
+
+
+def test_fedyogi_differs_from_fedadam():
+    a = _steps(_mk("fedadam"), T=5, seed=3)[-1][0]
+    y = _steps(_mk("fedyogi"), T=5, seed=3)[-1][0]
+    assert not np.allclose(a, y)
+
+
+def test_bounded_update_magnitude_option1():
+    """|Δx| <= η·|m|/sqrt(eps): max stabilization bounds the step."""
+    fed = _mk("fedams", eps=1e-2)
+    prev = np.zeros(32)
+    for x, st in _steps(fed, T=8, seed=5):
+        step = np.abs(x - prev)
+        bound = 1.0 * np.abs(np.asarray(st.m)) / np.sqrt(1e-2) + 1e-6
+        assert (step <= bound).all()
+        prev = x
