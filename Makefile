@@ -1,0 +1,12 @@
+.PHONY: verify test bench
+
+# Tier-1 gate (ROADMAP.md): same command contributors and CI run.
+verify:
+	bash scripts/verify.sh
+
+# Full suite without -x (see every failure).
+test:
+	PYTHONPATH=src python -m pytest -q
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

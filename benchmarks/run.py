@@ -14,11 +14,13 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import (fig1_fedams_vs_baselines, fig2_num_clients,
-                        fig3_local_epochs, fig4_compression, fig6_gamma,
-                        fig7_fedcams_clients, roofline, table1_bits)
+from benchmarks import (bench_wire, fig1_fedams_vs_baselines,
+                        fig2_num_clients, fig3_local_epochs, fig4_compression,
+                        fig6_gamma, fig7_fedcams_clients, roofline,
+                        table1_bits)
 
 SECTIONS = {
+    "wire": bench_wire.main,
     "fig1": lambda: fig1_fedams_vs_baselines.main("mlp"),
     "fig1_convmixer": lambda: fig1_fedams_vs_baselines.main("convmixer",
                                                             rounds=15),

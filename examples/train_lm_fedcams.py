@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import FedConfig, ModelConfig, TrainConfig
 from repro.core import (build_fed_round, fed_batch_defs, fed_state_defs,
                         init_fed_state)
@@ -72,9 +73,10 @@ sdefs = fed_state_defs(model, fed)
 ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
 bsp = jax.tree.map(lambda d: d.spec, fed_batch_defs(model, fed, train),
                    is_leaf=pdefs.is_def)
-step = jax.jit(jax.shard_map(build_fed_round(model, fed, train, ctx),
-                             mesh=mesh, in_specs=(ssp, bsp, P()),
-                             out_specs=(ssp, {"loss": P()})))
+step = jax.jit(compat.shard_map(build_fed_round(model, fed, train, ctx),
+                                mesh=mesh, in_specs=(ssp, bsp, P()),
+                                out_specs=(ssp, {"loss": P(),
+                                                 "wire_up_bytes": P()})))
 state = init_fed_state(model, fed, jax.random.PRNGKey(0))
 nparams = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state.params))
 print(f"model={cfg.name} params={nparams/1e6:.1f}M clients={args.clients} "
@@ -88,6 +90,7 @@ for r in range(args.rounds):
                       jnp.int32(r))
     if r % 10 == 0 or r == args.rounds - 1:
         print(f"round {r:4d}  loss {float(met['loss']):7.4f}  "
+              f"wire {float(met['wire_up_bytes'])/1e6:6.2f} MB/round  "
               f"({time.time()-t0:6.1f}s)")
 if args.checkpoint:
     from repro.checkpoint import save_pytree

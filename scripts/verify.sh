@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate — the exact command CI and ROADMAP.md use.
+# Run from the repo root:  bash scripts/verify.sh  (or: make verify)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

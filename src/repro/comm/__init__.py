@@ -1,0 +1,24 @@
+"""repro.comm — wire formats & transport for FedCAMS messages.
+
+Turns the paper's *analytic* bit accounting into *measured* bytes moving
+through a simulated network:
+
+    wire.py       packed byte codecs (dense32 / topk / blocktopk / sign)
+                  with bit-exact decode and exact ``nbytes`` sizing
+    transport.py  per-client bandwidth/latency/straggler network model and
+                  per-round wall-clock simulation
+    metrics.py    cumulative byte/time accounting (``CommLog``)
+
+Enable end-to-end with ``FedConfig(wire=True)`` (see core.rounds.FedSim):
+every client delta is encoded to packed bytes, timed through the network,
+and decoded server-side; ``FederatedTrainer.history`` then carries
+``wire_bytes`` / ``round_time_s`` alongside the analytic ``bits``.
+"""
+from repro.comm.metrics import CommLog  # noqa: F401
+from repro.comm.transport import (NetworkConfig, RoundTiming,  # noqa: F401
+                                  SimulatedNetwork)
+from repro.comm.wire import (HEADER_BYTES, WireCodec,  # noqa: F401
+                             make_blocktopk_codec, make_dense32_codec,
+                             make_sign_codec, make_topk_codec,
+                             make_wire_codec, measured_vs_analytic,
+                             parse_header)

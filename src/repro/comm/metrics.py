@@ -1,0 +1,40 @@
+"""Cumulative communication accounting for a training run.
+
+``CommLog`` accumulates the measured per-round transport numbers (bytes on
+the wire both directions, simulated wall-clock) that ``FedSim``'s wire mode
+surfaces into ``FederatedTrainer.history`` — the measured counterpart of
+the analytic ``bits`` counter the paper plots."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.comm.transport import RoundTiming
+
+
+@dataclass
+class CommLog:
+    rounds: int = 0
+    uplink_bytes: int = 0
+    downlink_bytes: int = 0
+    sim_time_s: float = 0.0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.uplink_bytes + self.downlink_bytes
+
+    def add(self, timing: RoundTiming) -> None:
+        self.rounds += 1
+        self.uplink_bytes += timing.uplink_bytes
+        self.downlink_bytes += timing.downlink_bytes
+        self.sim_time_s += timing.round_time_s
+
+    def record(self, timing: RoundTiming) -> dict:
+        """Add one round and return the history entries for it."""
+        self.add(timing)
+        return {
+            "wire_up_bytes": timing.uplink_bytes,
+            "wire_down_bytes": timing.downlink_bytes,
+            "wire_bytes": self.total_bytes,
+            "round_time_s": timing.round_time_s,
+            "sim_time_s": self.sim_time_s,
+        }

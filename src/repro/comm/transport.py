@@ -1,0 +1,93 @@
+"""Simulated client-server network for federated rounds.
+
+Models the part of the system the paper's bit counts are a proxy for: how
+long a round actually takes when m heterogeneous clients push their encoded
+deltas up a slow, asymmetric last-mile link. Per client the model draws a
+fixed uplink/downlink bandwidth (log-normal heterogeneity around configured
+means — clients keep their link quality across rounds) and per round a
+latency sample plus an optional straggler event that multiplies that
+client's times.
+
+A round is:  server broadcasts the (possibly compressed) model update down
+every participating client's downlink, clients compute (``compute_s``, a
+constant knob — compute is not what this module studies), then push their
+encoded delta up the uplink; the server waits for the slowest client:
+
+    T_round = max_i [ t_down(i) + compute_s + t_up(i) ]
+    t_dir(i) = latency(i) + bytes_dir / bandwidth_dir(i)
+
+Everything is host-side numpy — transport runs between jitted rounds, not
+inside them — and deterministic given (seed, round index).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    """Last-mile link model (defaults: consumer uplink-constrained WAN)."""
+
+    uplink_mbps: float = 20.0       # mean client->server bandwidth
+    downlink_mbps: float = 100.0    # mean server->client bandwidth (asym.)
+    bandwidth_sigma: float = 0.5    # log-normal spread across clients
+    latency_ms: float = 50.0        # mean one-way link setup latency
+    latency_jitter_ms: float = 10.0
+    straggler_prob: float = 0.05    # P(client is a straggler this round)
+    straggler_slowdown: float = 4.0
+    compute_s: float = 0.0          # fixed local-training time per round
+    seed: int = 0
+
+
+@dataclass
+class RoundTiming:
+    """Timing/byte report for one simulated round."""
+
+    round_time_s: float
+    uplink_bytes: int
+    downlink_bytes: int
+    slowest_client: int
+    mean_client_time_s: float
+    client_times_s: np.ndarray
+
+
+class SimulatedNetwork:
+    """Per-client link state + per-round timing draws (deterministic)."""
+
+    def __init__(self, cfg: NetworkConfig, num_clients: int):
+        self.cfg = cfg
+        self.num_clients = num_clients
+        rng = np.random.default_rng(cfg.seed)
+        # fixed per-client heterogeneity: a client on a bad link stays on it
+        lognorm = np.exp(rng.normal(-0.5 * cfg.bandwidth_sigma ** 2,
+                                    cfg.bandwidth_sigma, num_clients))
+        self.up_bps = cfg.uplink_mbps * 1e6 / 8.0 * lognorm
+        lognorm_d = np.exp(rng.normal(-0.5 * cfg.bandwidth_sigma ** 2,
+                                      cfg.bandwidth_sigma, num_clients))
+        self.down_bps = cfg.downlink_mbps * 1e6 / 8.0 * lognorm_d
+
+    def round(self, client_idx: Sequence[int], uplink_bytes_per_client: int,
+              downlink_bytes_per_client: int, round_idx: int) -> RoundTiming:
+        cfg = self.cfg
+        idx = np.asarray(client_idx, np.int64)
+        n = idx.size
+        rng = np.random.default_rng((cfg.seed + 1) * 1_000_003 + round_idx)
+        latency = np.maximum(
+            rng.normal(cfg.latency_ms, cfg.latency_jitter_ms, n), 1.0) / 1e3
+        slow = np.where(rng.random(n) < cfg.straggler_prob,
+                        cfg.straggler_slowdown, 1.0)
+        t_down = latency + downlink_bytes_per_client / self.down_bps[idx]
+        t_up = latency + uplink_bytes_per_client / self.up_bps[idx]
+        per_client = slow * (t_down + cfg.compute_s + t_up)
+        worst = int(np.argmax(per_client)) if n else -1
+        return RoundTiming(
+            round_time_s=float(per_client.max(initial=0.0)),
+            uplink_bytes=int(uplink_bytes_per_client) * n,
+            downlink_bytes=int(downlink_bytes_per_client) * n,
+            slowest_client=int(idx[worst]) if n else -1,
+            mean_client_time_s=float(per_client.mean()) if n else 0.0,
+            client_times_s=per_client,
+        )

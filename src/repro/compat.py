@@ -1,0 +1,43 @@
+"""Version shims for the jax APIs this repo uses from both the 0.4.x and
+the >=0.7 (vma-era) lines.
+
+``shard_map``
+    Newer jax exposes ``jax.shard_map`` with varying-manual-axes (vma)
+    tracking (``check_vma=True``), which our TP gradient correctness relies
+    on. jax 0.4.x only has ``jax.experimental.shard_map.shard_map``; its
+    ``check_rep=True`` replication checker predates the vma rules our model
+    code is typed against (explicit ``pvary`` + invariant gathers), so on
+    0.4.x we run with ``check_rep=False``. Forward-only paths (serving,
+    seq-sharded decode) and client-axis federation are numerically
+    identical; only multi-device TP *gradient* exactness needs the newer
+    line (tests/test_sharding.py marks that test ``requires_vma``).
+
+``pvary``
+    ``lax.pvary`` (vma-type cast, no communication) does not exist on 0.4.x.
+    There it is a no-op: with ``check_rep=False`` there is no replication
+    typing to cast against.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` when available, else the 0.4.x experimental one.
+    ``check_vma`` is forwarded on the vma line and ignored on 0.4.x (where
+    the equivalent knob is ``check_rep``, see module docstring)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axis_names):
+    """``lax.pvary`` when available (vma era), identity on 0.4.x."""
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, axis_names)
+    return x

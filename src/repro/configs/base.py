@@ -229,6 +229,12 @@ class FedConfig:
     aggregation: str = "dense"     # dense | sparse  (see DESIGN.md §3)
     delta_dtype: str = "float32"   # wire dtype for the dense client collective
     two_way: bool = False          # beyond-paper: compress server->client too
+    # -- wire mode (repro.comm): encode every delta to packed bytes, move
+    # it through the simulated network, decode server-side; history gains
+    # measured wire_bytes / round_time_s next to the analytic bits.
+    wire: bool = False
+    wire_value_dtype: str = "float32"  # float32 = bit-exact vs the dense path
+    wire_block: int = 2048         # codec block size (blocktopk/bitpack)
     client_axes: Tuple[str, ...] = ("data",)   # mesh axes that enumerate clients
     use_kernels: bool = False      # use Pallas kernels for compress+server update
     # ZeRO-style sharding of the server optimizer state (m, v, v_hat) over

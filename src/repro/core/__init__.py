@@ -7,7 +7,8 @@ from repro.core.compressors import Compressor, make_compressor  # noqa: F401
 from repro.core.error_feedback import ef_compress, ef_compress_masked  # noqa: F401
 from repro.core.rounds import (FedMeshState, FedSim, SimState,  # noqa: F401
                                build_fed_round, fed_batch_defs,
-                               fed_state_defs, init_fed_state)
+                               fed_state_defs, init_fed_state,
+                               mesh_wire_bytes)
 from repro.core.sampling import participation_mask, sample_clients  # noqa: F401
 from repro.core.server_opt import (ServerState, init_server_state,  # noqa: F401
                                    server_update)

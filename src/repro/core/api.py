@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core.rounds import (FedSim, build_fed_round, fed_batch_defs,
                                fed_state_defs, init_fed_state)
@@ -39,14 +40,21 @@ class FederatedTrainer:
     model: Optional[object] = None               # repro.models.Model
     mesh: Optional[object] = None
     lm_data: Optional[object] = None             # needs .mesh_batch(...)
+    # wire mode (fed.wire=True): optional custom repro.comm.SimulatedNetwork
+    network: Optional[object] = None
 
     def __post_init__(self):
         self.history: List[Dict] = []
         if self.mesh is None:
             assert self.loss_fn is not None and self.init_params is not None
-            self._sim = FedSim(self.loss_fn, self.fed)
+            self._sim = FedSim(self.loss_fn, self.fed, network=self.network)
             self._state = self._sim.init(self.init_params)
         else:
+            if self.network is not None:
+                raise ValueError(
+                    "network= is a simulation-backend (mesh=None) feature; "
+                    "the mesh path reports measured wire_up_bytes but does "
+                    "not simulate transport")
             tp = dict(zip(self.mesh.axis_names,
                           self.mesh.devices.shape)).get("model", 1)
             assert self.model is not None and self.model.tp == tp
@@ -66,9 +74,9 @@ class FederatedTrainer:
             bdefs = fed_batch_defs(self.model, self.fed, self.train)
             bsp = jax.tree.map(lambda d: d.spec, bdefs, is_leaf=pdefs.is_def)
             rnd = build_fed_round(self.model, self.fed, self.train, ctx)
-            self._step = jax.jit(jax.shard_map(
+            self._step = jax.jit(compat.shard_map(
                 rnd, mesh=self.mesh, in_specs=(ssp, bsp, P()),
-                out_specs=(ssp, {"loss": P()})))
+                out_specs=(ssp, {"loss": P(), "wire_up_bytes": P()})))
             self._state = init_fed_state(self.model, self.fed,
                                          jax.random.PRNGKey(self.train.seed))
 

@@ -86,7 +86,10 @@ def make_blocktopk(ratio: float, block: int = 2048) -> Compressor:
 def make_sign() -> Compressor:
     def compress(x, rng=None):
         scale = jnp.mean(jnp.abs(x))            # ||x||_1 / d
-        return scale * jnp.sign(x)
+        # sign(0) := +1 — the convention a 1-bit wire format can actually
+        # carry (comm.wire sign codec, rounds._packed_sign_leaf); keeps
+        # decode(encode(x)) == compress(x) bit-exact including exact zeros.
+        return scale * jnp.where(x >= 0, 1.0, -1.0)
 
     def q_bound(x):
         x = jnp.asarray(x, jnp.float32).reshape(-1)

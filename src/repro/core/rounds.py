@@ -19,10 +19,12 @@ from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core.compressors import Compressor, make_compressor
 from repro.core.error_feedback import ef_compress, ef_compress_masked
@@ -48,20 +50,50 @@ class SimState(NamedTuple):
 
 
 class FedSim:
-    """Federated simulation over an arbitrary ``loss_fn(params, batch)``."""
+    """Federated simulation over an arbitrary ``loss_fn(params, batch)``.
+
+    With ``fed.wire=True`` every client delta is serialized to packed bytes
+    (repro.comm.wire), timed through a simulated network
+    (repro.comm.transport — pass ``network`` to customize links), and
+    decoded server-side; error feedback tracks the decoded value, so the
+    simulation is exact w.r.t. what the wire actually carried. Round
+    metrics then include measured ``wire_bytes`` and simulated
+    ``round_time_s`` next to the analytic ``bits``.
+    """
 
     def __init__(self, loss_fn: Callable, fed: FedConfig,
-                 compressor: Optional[Compressor] = None):
+                 compressor: Optional[Compressor] = None,
+                 network: Optional[object] = None):
         self.loss_fn = loss_fn
         self.fed = fed
         if compressor is None and fed.algorithm == "fedcams":
-            compressor = make_compressor(fed.compressor, fed.compress_ratio)
+            compressor = make_compressor(fed.compressor, fed.compress_ratio,
+                                         fed.wire_block)
         self.comp = compressor if fed.algorithm == "fedcams" else None
         self._round_fn = None
+        self.codec = None
+        self.network = None
+        if network is not None and not fed.wire:
+            raise ValueError(
+                "a network was supplied but fed.wire is False — the "
+                "transport simulation only runs in wire mode; set "
+                "FedConfig(wire=True)")
+        if fed.wire:
+            from repro.comm import (CommLog, NetworkConfig, SimulatedNetwork,
+                                    make_dense32_codec, make_wire_codec)
+            name = fed.compressor if self.comp is not None else "dense32"
+            self.codec = make_wire_codec(name, fed.compress_ratio,
+                                         fed.wire_block, fed.wire_value_dtype)
+            self._down_codec = (self.codec if fed.two_way
+                                else make_dense32_codec())
+            self.network = network or SimulatedNetwork(
+                NetworkConfig(), fed.num_clients)
+            self.comm_log = CommLog()
 
     def init(self, params) -> SimState:
         flat, self.unravel = ravel_pytree(params)
         d = flat.size
+        self._d = d
         m = self.fed.num_clients
         return SimState(
             params=params,
@@ -79,7 +111,17 @@ class FedSim:
         """client_batches: pytree with leading (n, K, ...); client_idx: (n,)."""
         if self._round_fn is None:
             self._round_fn = jax.jit(self._round_impl)
-        return self._round_fn(state, client_batches, client_idx, rng)
+        new_state, met = self._round_fn(state, client_batches, client_idx, rng)
+        if self.network is not None:
+            # transport runs between jitted rounds: byte counts are static
+            # per codec, the timing draw is host-side numpy
+            up = self.codec.nbytes(self._d)
+            down = self._down_codec.nbytes(self._d)
+            timing = self.network.round(np.asarray(client_idx), up, down,
+                                        int(state.round))
+            met = dict(met)
+            met.update(self.comm_log.record(timing))
+        return new_state, met
 
     def _local_train(self, params, batches):
         """K local SGD steps for ONE client. batches: (K, ...)."""
@@ -107,9 +149,18 @@ class FedSim:
         gamma = jnp.zeros(())
         if self.comp is not None:
             errs = state.errors[client_idx]
-            def one(dd, ee, i):
-                return ef_compress(self.comp, dd, ee,
-                                   jax.random.fold_in(rng, i))
+            if self.codec is not None:
+                # wire mode: the delta really goes through encode->decode;
+                # EF tracks the *decoded* value, so narrowed wire value
+                # dtypes stay exact in the error-feedback sense
+                def one(dd, ee, i):
+                    tot = dd + ee
+                    hat = self.codec.decode(self.codec.encode(tot), d)
+                    return hat, tot - hat
+            else:
+                def one(dd, ee, i):
+                    return ef_compress(self.comp, dd, ee,
+                                       jax.random.fold_in(rng, i))
             hats, new_errs = jax.vmap(one)(delta, errs, jnp.arange(n))
             errors = state.errors.at[client_idx].set(new_errs)
             agg = jnp.mean(hats, axis=0)
@@ -123,6 +174,10 @@ class FedSim:
                                    1e-12))
         else:
             errors = state.errors
+            if self.codec is not None:  # uncompressed algo, dense32 wire
+                delta = jax.vmap(
+                    lambda t: self.codec.decode(self.codec.encode(t), d)
+                )(delta)
             agg = jnp.mean(delta, axis=0)
             bits = state.bits + n * 32 * d
 
@@ -134,7 +189,10 @@ class FedSim:
         if fed.two_way and self.comp is not None:
             upd = new_flat - state.x_client
             tot = upd + state.server_error
-            hat = self.comp.compress(tot, jax.random.fold_in(rng, 10**6))
+            if self.codec is not None:  # downlink exercises the codec too
+                hat = self.codec.decode(self.codec.encode(tot), d)
+            else:
+                hat = self.comp.compress(tot, jax.random.fold_in(rng, 10**6))
             server_error = tot - hat
             x_client = state.x_client + hat
         else:
@@ -289,7 +347,9 @@ def _packed_sign_leaf(tot, my_mask, n_eff, ctx: ParallelContext):
     g_scale = ctx.all_gather_clients(scale[None], axis=0)    # (m,)
     signs = jnp.unpackbits(g_bits, axis=1)[:, :d].astype(jnp.float32) * 2.0 - 1.0
     agg = (g_scale[:, None] * signs).sum(0) / n_eff
-    hat = jnp.mean(jnp.abs(flat)) * jnp.sign(flat)
+    # sign(0) := +1 to match the packed bits (error feedback must track the
+    # value the wire actually carried)
+    hat = jnp.mean(jnp.abs(flat)) * jnp.where(flat >= 0, 1.0, -1.0)
     return agg.reshape(tot.shape), hat.reshape(tot.shape)
 
 
@@ -341,6 +401,37 @@ def _sharded_server_update(fed: FedConfig, st: ServerState, params, agg,
 # -- the round ---------------------------------------------------------------
 
 
+def mesh_wire_bytes(fed: FedConfig, delta_tree, block: int = 2048,
+                    tp: int = 1) -> int:
+    """Measured per-client contribution bytes for one mesh round's
+    client-axis collective, sized to what the aggregation paths *actually*
+    move per leaf: ``_sparse_topk_leaf`` gathers uint32 global indices +
+    fp32 values for the kept coordinates (8 bytes each), ``_packed_sign_leaf``
+    gathers the 8→1 packed sign bits + one fp32 scale, and the dense psum
+    carries ``delta_dtype`` words. (Collectives carry no per-message header,
+    unlike the comm.wire point-to-point codecs.)
+
+    ``delta_tree`` holds this device's *local* shards; every one of the
+    client's ``tp`` model-parallel devices pushes its own payload into the
+    client-axis collective (model-replicated leaves included — each device
+    sends its copy), so the client's wire traffic is the local total × tp.
+    """
+    from repro.core.compressors import block_layout
+    sparse = fed.algorithm == "fedcams" and fed.aggregation == "sparse"
+    total = 0
+    for leaf in jax.tree.leaves(delta_tree):
+        dl = int(np.prod(leaf.shape))
+        if sparse and fed.compressor in ("topk", "blocktopk"):
+            bs, nb = block_layout(dl, block)
+            kb = max(1, int(round(fed.compress_ratio * bs)))
+            total += nb * kb * 8          # uint32 index + fp32 value
+        elif sparse and fed.compressor == "packedsign":
+            total += (dl + 7) // 8 + 4    # 1 bit/coord + fp32 scale
+        else:
+            total += dl * jnp.dtype(fed.delta_dtype).itemsize
+    return total * max(tp, 1)
+
+
 def build_fed_round(model, fed: FedConfig, train: TrainConfig,
                     ctx: ParallelContext, *, chunk: int = 2048,
                     kernel_impl: Optional[object] = None):
@@ -381,7 +472,7 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
             if not fed.client_axes:
                 return t
             return jax.tree.map(
-                lambda x: lax.pvary(x, tuple(fed.client_axes)), t)
+                lambda x: compat.pvary(x, tuple(fed.client_axes)), t)
 
         local0 = _pvary(params)
 
@@ -468,7 +559,14 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
         new_state = FedMeshState(params=new_params, m=new_st.m, v=new_st.v,
                                  vhat=new_st.vhat, errors=errors,
                                  round=new_st.t)
-        return new_state, {"loss": loss}
+        # measured uplink bytes this round (trace-time constant, replicated);
+        # same key/semantics as FedSim wire mode's per-round uplink metric.
+        # All m client-axis devices feed the collective — non-participants
+        # contribute masked zeros that still occupy wire — so the factor is
+        # m, not n_part.
+        wire = jnp.float32(
+            m_clients * mesh_wire_bytes(fed, delta, tp=ctx.tp))
+        return new_state, {"loss": loss, "wire_up_bytes": wire}
 
     return fed_round
 

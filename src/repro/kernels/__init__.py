@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots: the compression
 path (blockwise top-k / scaled-sign, fused with error feedback) and the
 fused FedAMS server update. Validated in interpret mode against ref.py."""
+from repro.kernels.bitpack import (pack_bits, pack_bits_ref,  # noqa: F401
+                                   unpack_bits, unpack_bits_ref)
 from repro.kernels.fedams_update import fedams_update  # noqa: F401
 from repro.kernels.ops import KernelImpl  # noqa: F401
 from repro.kernels.sign_ef import sign_ef  # noqa: F401

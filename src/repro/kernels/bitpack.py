@@ -1,0 +1,92 @@
+"""1-bit pack/unpack as Pallas TPU kernels (the sign codec's hot loop).
+
+The sign wire format (comm.wire) carries 1 bit per coordinate; packing
+8 sign bits into each uint8 is a pure byte-shuffle that on TPU should
+stream HBM→VMEM once per tile instead of materializing an 8× larger bit
+tensor. Each grid step packs a ``block``-bit tile: reshape to (block/8, 8),
+weight by MSB-first powers of two (matching ``jnp.packbits``'s big-endian
+bit order, which the wire format uses), and reduce. ``unpack_bits`` is the
+inverse (shift + mask against the same weights).
+
+``pack_bits_ref`` / ``unpack_bits_ref`` are the jnp oracles the kernels are
+validated against in tests/test_wire.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048  # bits per grid step (must be a multiple of 8)
+
+_WEIGHTS = (128, 64, 32, 16, 8, 4, 2, 1)  # MSB-first, like jnp.packbits
+
+
+def pack_bits_ref(bits):
+    """bits: (N,) uint8/bool in {0,1}, N % 8 == 0. Returns (N/8,) uint8."""
+    b = bits.reshape(-1, 8).astype(jnp.int32)
+    w = jnp.asarray(_WEIGHTS, jnp.int32)
+    return jnp.sum(b * w, axis=1).astype(jnp.uint8)
+
+
+def unpack_bits_ref(packed):
+    """packed: (M,) uint8. Returns (8*M,) uint8 in {0,1}."""
+    p = packed.astype(jnp.int32)
+    shifts = jnp.arange(7, -1, -1, dtype=jnp.int32)
+    return ((p[:, None] >> shifts) & 1).reshape(-1).astype(jnp.uint8)
+
+
+def _msb_first_shifts(rows: int):
+    # 7..0 per byte lane, built with an in-kernel iota (pallas kernels may
+    # not capture host constants)
+    return 7 - jax.lax.broadcasted_iota(jnp.int32, (rows, 8), 1)
+
+
+def _pack_kernel(b_ref, out_ref):
+    b = b_ref[...].reshape(-1, 8).astype(jnp.int32)
+    out_ref[...] = jnp.sum(b << _msb_first_shifts(b.shape[0]),
+                           axis=1).astype(jnp.uint8)
+
+
+def _unpack_kernel(p_ref, out_ref):
+    p = p_ref[...].astype(jnp.int32)
+    shifts = _msb_first_shifts(p.shape[0])
+    out_ref[...] = ((p[:, None] >> shifts) & 1).reshape(-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pack_bits(bits, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """bits: (N,) uint8 in {0,1} with N % block == 0, block % 8 == 0.
+    Returns (N/8,) uint8, identical to ``pack_bits_ref``."""
+    assert bits.ndim == 1 and block % 8 == 0
+    n = bits.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block // 8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // 8,), jnp.uint8),
+        interpret=interpret,
+    )(bits.astype(jnp.uint8))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def unpack_bits(packed, *, block: int = DEFAULT_BLOCK,
+                interpret: bool = True):
+    """packed: (M,) uint8 with 8*M % block == 0. Returns (8*M,) uint8."""
+    assert packed.ndim == 1 and block % 8 == 0
+    m = packed.shape[0]
+    assert (8 * m) % block == 0, (m, block)
+    grid = (8 * m // block,)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block // 8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((8 * m,), jnp.uint8),
+        interpret=interpret,
+    )(packed)

@@ -30,10 +30,11 @@ def topk_ef_ref(x, err, k: int, block: int):
 
 
 def sign_ef_ref(x, err):
-    """x, err: (N,). Returns (hat, new_err). Scale = mean |x+err| (global)."""
+    """x, err: (N,). Returns (hat, new_err). Scale = mean |x+err| (global);
+    sign(0) := +1 (the convention the 1-bit wire format carries)."""
     tot = x + err
     scale = jnp.mean(jnp.abs(tot))
-    hat = scale * jnp.sign(tot)
+    hat = scale * jnp.where(tot >= 0, 1.0, -1.0)
     return hat, tot - hat
 
 

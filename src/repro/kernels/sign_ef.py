@@ -27,7 +27,9 @@ def _l1_partial_kernel(x_ref, e_ref, out_ref):
 def _sign_ef_kernel(scale_ref, x_ref, e_ref, hat_ref, err_ref):
     tot = x_ref[...] + e_ref[...]
     scale = scale_ref[0]
-    hat = scale * jnp.sign(tot)
+    # sign(0) := +1, matching make_sign and the 1-bit wire format (a 1-bit
+    # lane cannot carry a third "zero" state)
+    hat = scale * jnp.where(tot >= 0, 1.0, -1.0)
     hat_ref[...] = hat
     err_ref[...] = tot - hat
 

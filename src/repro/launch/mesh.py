@@ -16,16 +16,23 @@ HBM_BW = 819e9                 # B/s
 ICI_BW_PER_LINK = 50e9         # B/s per link
 
 
+def _mesh_kwargs(n_axes: int) -> dict:
+    """Version shim: ``jax.sharding.AxisType`` (and the ``axis_types=``
+    kwarg of ``jax.make_mesh``) only exist on newer jax; on 0.4.x every
+    mesh axis is implicitly Auto, so omitting the kwarg is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / small local runs)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_mesh_kwargs(len(axes)))

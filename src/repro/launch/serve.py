@@ -35,6 +35,7 @@ def main(argv=None) -> None:
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
     from repro.configs.registry import get_arch
     from repro.launch.mesh import make_mesh
     from repro.models import params as pdefs
@@ -63,7 +64,7 @@ def main(argv=None) -> None:
         cdefs = model.cache_defs(args.batch, max_len, seq_sharded=False)
         cspecs = jax.tree.map(lambda d: d.spec, cdefs, is_leaf=pdefs.is_def)
 
-        prefill = jax.jit(jax.shard_map(
+        prefill = jax.jit(compat.shard_map(
             lambda p, t: model.prefill(p, t, ctx, max_len=max_len),
             mesh=mesh, in_specs=(pspecs, P()),
             out_specs=(P("model"), cspecs)))
@@ -72,7 +73,7 @@ def main(argv=None) -> None:
             lg, c2 = model.decode_step(p, t, c, pos, ctx, max_len=max_len)
             return greedy_sample(lg, ctx), c2
 
-        decode = jax.jit(jax.shard_map(
+        decode = jax.jit(compat.shard_map(
             dstep, mesh=mesh, in_specs=(pspecs, P(), cspecs, P()),
             out_specs=(P(), cspecs)))
     else:

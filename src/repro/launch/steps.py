@@ -15,6 +15,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import (FedConfig, ModelConfig, ShapeConfig,
@@ -150,10 +152,10 @@ def build_train_step(spec: ArchSpec, shape: ShapeConfig, mesh,
 
     rnd = build_fed_round(model, fed, train, ctx, chunk=chunk,
                           kernel_impl=kernel_impl)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         rnd, mesh=mesh,
         in_specs=(state_specs, batch_specs, P()),
-        out_specs=(state_specs, {"loss": P()}),
+        out_specs=(state_specs, {"loss": P(), "wire_up_bytes": P()}),
         check_vma=True))
     abstract = (pdefs.abstract_params(sdefs, mesh),
                 pdefs.abstract_params(bdefs, mesh),
@@ -186,7 +188,7 @@ def build_prefill_step(spec: ArchSpec, shape: ShapeConfig, mesh,
             return model.encode(params, batch, ctx, chunk=chunk)
 
         out_specs = P(bax, None, "model")
-        fn = jax.jit(jax.shard_map(step, mesh=mesh,
+        fn = jax.jit(compat.shard_map(step, mesh=mesh,
                                    in_specs=(param_specs, bspecs),
                                    out_specs=out_specs))
         abstract = (model.abstract_params(mesh),
@@ -206,7 +208,7 @@ def build_prefill_step(spec: ArchSpec, shape: ShapeConfig, mesh,
         return model.prefill(params, tokens, ctx, max_len=shape.seq_len,
                              chunk=chunk)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         step, mesh=mesh,
         in_specs=(param_specs, tok_def.spec),
         out_specs=(P(bax, "model"), cache_specs)))
@@ -239,7 +241,7 @@ def build_decode_step(spec: ArchSpec, shape: ShapeConfig, mesh,
         return model.decode_step(params, token, caches, pos, ctx,
                                  max_len=shape.seq_len)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         step, mesh=mesh,
         in_specs=(param_specs, tok_def.spec, cache_specs, P()),
         out_specs=(P(bax, "model"), cache_specs)))

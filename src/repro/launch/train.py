@@ -51,6 +51,7 @@ def main(argv=None) -> None:
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
     from repro.configs import FedConfig, TrainConfig
     from repro.configs.registry import get_arch
     from repro.core.rounds import (build_fed_round, fed_batch_defs,
@@ -85,9 +86,10 @@ def main(argv=None) -> None:
     state_specs = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
     bdefs = fed_batch_defs(model, fed, train)
     batch_specs = jax.tree.map(lambda d: d.spec, bdefs, is_leaf=pdefs.is_def)
-    step = jax.jit(jax.shard_map(rnd, mesh=mesh,
+    step = jax.jit(compat.shard_map(rnd, mesh=mesh,
                                  in_specs=(state_specs, batch_specs, P()),
-                                 out_specs=(state_specs, {"loss": P()}),
+                                 out_specs=(state_specs,
+                                            {"loss": P(), "wire_up_bytes": P()}),
                                  check_vma=True))
     state = init_fed_state(model, fed, jax.random.PRNGKey(train.seed))
     nparams = sum(int(np.prod(l.shape))

@@ -5,6 +5,8 @@ import sys
 # single real device. Multi-device sharding tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves (test_sharding.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ itself, for the optional-dependency shims (hypothesis_fallback)
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 import pytest

@@ -1,0 +1,89 @@
+"""Deterministic stand-in for the subset of ``hypothesis`` the test-suite
+uses, so tier-1 collects and runs on images without the dependency.
+
+Only what the tests need is implemented: ``given`` over ``st.integers`` /
+``st.sampled_from`` strategies (each test runs against a fixed number of
+seeded draws), and a ``settings`` object whose ``register_profile`` /
+``load_profile`` control ``max_examples``. Install the real package
+(``pip install -r requirements-dev.txt``) for full shrinking/coverage.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+st = strategies
+
+
+class settings:
+    """Profile registry mirroring ``hypothesis.settings``'s tiny surface."""
+
+    _profiles = {"default": {"max_examples": 20}}
+    _active = "default"
+
+    def __init__(self, **kw):  # used as @settings(...) decorator passthrough
+        self._kw = kw
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._active = name
+
+    @classmethod
+    def max_examples(cls):
+        return int(cls._profiles.get(cls._active, {}).get("max_examples", 20))
+
+
+def given(*strats):
+    """Run the test against ``max_examples`` deterministic seeded draws."""
+
+    def deco(fn):
+        # NB: the wrapper must expose a ZERO-arg signature — pytest would
+        # otherwise read the test's drawn parameters as fixture requests.
+        def wrapper():
+            for i in range(settings.max_examples()):
+                rng = np.random.default_rng(0xC0FFEE + 7919 * i)
+                drawn = tuple(s.example(rng) for s in strats)
+                fn(*drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

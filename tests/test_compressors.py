@@ -3,8 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # see tests/hypothesis_fallback.py
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.compressors import (make_blocktopk, make_compressor,
                                     make_identity, make_int8, make_randk,

@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # see tests/hypothesis_fallback.py
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.compressors import make_sign, make_topk
 from repro.core.error_feedback import ef_compress, ef_compress_masked
