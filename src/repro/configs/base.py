@@ -235,6 +235,11 @@ class FedConfig:
     wire: bool = False
     wire_value_dtype: str = "float32"  # float32 = bit-exact vs the dense path
     wire_block: int = 2048         # codec block size (blocktopk/bitpack)
+    wire_pack_impl: str = "jnp"    # jnp | pallas — sub-word bit packing path
+    # FedSim: process the per-client train/compress/encode pipeline in
+    # chunks of this many clients (lax.scan over n/client_chunk chunks), so
+    # peak delta memory is (client_chunk, d) instead of (n, d). 0 = off.
+    client_chunk: int = 0
     client_axes: Tuple[str, ...] = ("data",)   # mesh axes that enumerate clients
     use_kernels: bool = False      # use Pallas kernels for compress+server update
     # ZeRO-style sharding of the server optimizer state (m, v, v_hat) over

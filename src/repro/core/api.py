@@ -74,9 +74,14 @@ class FederatedTrainer:
             bdefs = fed_batch_defs(self.model, self.fed, self.train)
             bsp = jax.tree.map(lambda d: d.spec, bdefs, is_leaf=pdefs.is_def)
             rnd = build_fed_round(self.model, self.fed, self.train, ctx)
+            # state buffers are donated: FedMeshState (params, opt moments,
+            # per-client EF errors) updates in place round over round
             self._step = jax.jit(compat.shard_map(
                 rnd, mesh=self.mesh, in_specs=(ssp, bsp, P()),
-                out_specs=(ssp, {"loss": P(), "wire_up_bytes": P()})))
+                out_specs=(ssp, {"loss": P(), "wire_up_bytes": P()})),
+                donate_argnums=(0,))
+            self._rnd, self._ssp, self._bsp = rnd, ssp, bsp
+            self._scan_step = None
             self._state = init_fed_state(self.model, self.fed,
                                          jax.random.PRNGKey(self.train.seed))
 
@@ -84,11 +89,86 @@ class FederatedTrainer:
     def params(self):
         return self._state.params
 
+    def _mesh_scan_step(self):
+        """Lazily build the scan-driven mesh step: R rounds of stacked
+        batches/seeds scanned inside one shard_map (jit retraces per R)."""
+        if self._scan_step is None:
+            from repro.core.rounds import (build_fed_rounds_scan,
+                                           scan_batch_specs)
+            self._scan_step = jax.jit(compat.shard_map(
+                build_fed_rounds_scan(self._rnd), mesh=self.mesh,
+                in_specs=(self._ssp, scan_batch_specs(self._bsp), P(None)),
+                out_specs=(self._ssp, {"loss": P(None),
+                                       "wire_up_bytes": P(None)})),
+                donate_argnums=(0,))
+        return self._scan_step
+
+    def _stage_sim_rounds(self, rng, r0: int, count: int, batch_size: int):
+        """Host-side staging for ``count`` rounds: the same rng stream and
+        data order the per-round loop consumes, stacked with leading R."""
+        n = self.fed.participating or self.fed.num_clients
+        idxs, keys, batches = [], [], []
+        for r in range(r0, r0 + count):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            idx = np.asarray(sample_clients(k1, self.fed.num_clients, n))
+            batches.append(self.data.round_batches(
+                idx, r, self.fed.local_steps, batch_size))
+            idxs.append(idx)
+            keys.append(k2)
+        stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
+                               *batches)
+        return rng, stacked, jnp.asarray(np.stack(idxs)), jnp.stack(keys)
+
     def run(self, rounds: Optional[int] = None, *, batch_size: int = 20,
+            scan_rounds: int = 0,
             log: Optional[Callable[[str], None]] = print):
+        """Train for ``rounds``. With ``scan_rounds=R > 1`` the driver
+        stages R rounds of client indices and batches at a time and runs
+        them as one on-device ``lax.scan`` (one dispatch + one metrics sync
+        per R rounds, bit-identical history); otherwise one jitted call per
+        round."""
         rounds = rounds or self.train.rounds
         rng = jax.random.PRNGKey(self.train.seed + 1)
         t0 = time.time()
+
+        def record(met, r):
+            rec = {k: float(v) for k, v in met.items()}
+            rec["round"] = r
+            self.history.append(rec)
+            if log and (r % self.train.log_every == 0 or r == rounds - 1):
+                log(f"round {r:4d}  loss {rec['loss']:8.4f}  "
+                    f"({time.time() - t0:.1f}s)")
+
+        if scan_rounds and scan_rounds > 1:
+            r = 0
+            while r < rounds:
+                chunk = min(scan_rounds, rounds - r)
+                if self.mesh is None:
+                    rng, batches, idx, keys = self._stage_sim_rounds(
+                        rng, r, chunk, batch_size)
+                    self._state, mets = self._sim.run_rounds(
+                        self._state, batches, idx, keys)
+                else:
+                    from repro.core.rounds import stage_mesh_rounds
+                    batches, seeds = stage_mesh_rounds(
+                        self.lm_data, r, chunk, self.fed.local_steps,
+                        self.train.global_batch, self.train.seq_len)
+                    self._state, stacked = self._mesh_scan_step()(
+                        self._state, batches, seeds)
+                    stacked = jax.device_get(stacked)
+                    mets = [{k: v[i] for k, v in stacked.items()}
+                            for i in range(chunk)]
+                for i, met in enumerate(mets):
+                    record(met, r + i)
+                r += chunk
+                ce = self.train.checkpoint_every
+                if ce and any(rr % ce == 0 and rr > 0
+                              for rr in range(r - chunk, r)):
+                    # only chunk-boundary states exist under scan: snapshot
+                    # once per chunk that crossed a checkpoint round
+                    self.save(f"ckpt_round{r - 1}")
+            return self.history
+
         for r in range(rounds):
             if self.mesh is None:
                 rng, k1, k2 = jax.random.split(rng, 3)
@@ -106,12 +186,7 @@ class FederatedTrainer:
                 self._state, met = self._step(
                     self._state, {k: jnp.asarray(v) for k, v in raw.items()},
                     jnp.int32(r))
-            rec = {k: float(v) for k, v in met.items()}
-            rec["round"] = r
-            self.history.append(rec)
-            if log and (r % self.train.log_every == 0 or r == rounds - 1):
-                log(f"round {r:4d}  loss {rec['loss']:8.4f}  "
-                    f"({time.time() - t0:.1f}s)")
+            record(met, r)
             if (self.train.checkpoint_every
                     and r % self.train.checkpoint_every == 0 and r > 0):
                 self.save(f"ckpt_round{r}")

@@ -45,8 +45,26 @@ class SimState(NamedTuple):
     errors: jax.Array         # (m, d) per-client EF errors
     server_error: jax.Array   # (d,) server-side EF error (two-way mode)
     x_client: jax.Array       # (d,) model as clients see it (two-way mode)
-    bits: jax.Array           # cumulative one-way communicated bits
-    round: jax.Array
+    # Host-side Python ints, exact at any scale: fp32 accumulation is only
+    # exact below 2^24, which a single dense round at d=11.2M blows through
+    # (n·32·d ≈ 3.6e8 bits), silently freezing cumulative-bits plots — and
+    # keeping them off-device means the round needs no device→host sync.
+    bits: int                 # cumulative one-way communicated bits
+    round: int
+
+
+class _CoreState(NamedTuple):
+    """The device-resident slice of :class:`SimState` — the jit/scan carry.
+
+    ``bits``/``round`` stay host-side (see SimState); everything here is
+    donated to the round executable (``donate_argnums``) so the (m, d)
+    error-feedback buffer and the optimizer state update in place instead
+    of being copied every round."""
+    params: object
+    opt: ServerState
+    errors: jax.Array
+    server_error: jax.Array
+    x_client: jax.Array
 
 
 class FedSim:
@@ -70,7 +88,15 @@ class FedSim:
             compressor = make_compressor(fed.compressor, fed.compress_ratio,
                                          fed.wire_block)
         self.comp = compressor if fed.algorithm == "fedcams" else None
+        n_round = fed.participating or fed.num_clients
+        if fed.client_chunk and 0 < fed.client_chunk < n_round \
+                and n_round % fed.client_chunk:
+            raise ValueError(
+                f"client_chunk={fed.client_chunk} must divide the "
+                f"per-round client count n={n_round} — a silent fallback "
+                f"to the full (n, d) vmap would defeat the memory bound")
         self._round_fn = None
+        self._scan_fn = None
         self.codec = None
         self.network = None
         if network is not None and not fed.wire:
@@ -83,7 +109,8 @@ class FedSim:
                                     make_dense32_codec, make_wire_codec)
             name = fed.compressor if self.comp is not None else "dense32"
             self.codec = make_wire_codec(name, fed.compress_ratio,
-                                         fed.wire_block, fed.wire_value_dtype)
+                                         fed.wire_block, fed.wire_value_dtype,
+                                         fed.wire_pack_impl)
             self._down_codec = (self.codec if fed.two_way
                                 else make_dense32_codec())
             self.network = network or SimulatedNetwork(
@@ -95,33 +122,88 @@ class FedSim:
         d = flat.size
         self._d = d
         m = self.fed.num_clients
+        # copy the caller's params ONCE: the first round donates the state's
+        # buffers, and consuming arrays the caller still owns would poison
+        # any later use of their init pytree
+        params = jax.tree.map(jnp.array, params)
         return SimState(
             params=params,
             opt=init_server_state(flat),
             errors=jnp.zeros((m, d), jnp.float32),
             server_error=jnp.zeros((d,), jnp.float32),
             x_client=flat,
-            bits=jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64
-                           else jnp.float32),
-            round=jnp.zeros((), jnp.int32),
+            bits=0,
+            round=0,
         )
+
+    def _bits_per_round(self, n: int) -> int:
+        """Analytic one-way bits for one round (exact host-side int)."""
+        if self.comp is not None:
+            return n * int(self.comp.bits_per_message(self._d))
+        return n * 32 * self._d
+
+    def _transport_met(self, idx_host, round_idx: int) -> dict:
+        """Simulated-network timing for one round (host-side numpy)."""
+        up = self.codec.nbytes(self._d)
+        down = self._down_codec.nbytes(self._d)
+        timing = self.network.round(idx_host, up, down, round_idx)
+        return self.comm_log.record(timing)
 
     # -- one round ---------------------------------------------------------
     def round(self, state: SimState, client_batches, client_idx, rng):
-        """client_batches: pytree with leading (n, K, ...); client_idx: (n,)."""
+        """client_batches: pytree with leading (n, K, ...); client_idx: (n,).
+
+        The input state's device buffers are DONATED to the round
+        executable (the (m, d) EF error buffer updates in place) — keep
+        only the returned state."""
         if self._round_fn is None:
-            self._round_fn = jax.jit(self._round_impl)
-        new_state, met = self._round_fn(state, client_batches, client_idx, rng)
+            self._round_fn = jax.jit(self._round_impl, donate_argnums=(0,))
+        new_core, met = self._round_fn(_CoreState(*state[:5]), client_batches,
+                                       client_idx, rng)
+        bits = state.bits + self._bits_per_round(client_idx.shape[0])
+        met = dict(met)
+        met["bits"] = bits
         if self.network is not None:
             # transport runs between jitted rounds: byte counts are static
-            # per codec, the timing draw is host-side numpy
-            up = self.codec.nbytes(self._d)
-            down = self._down_codec.nbytes(self._d)
-            timing = self.network.round(np.asarray(client_idx), up, down,
-                                        int(state.round))
-            met = dict(met)
-            met.update(self.comm_log.record(timing))
-        return new_state, met
+            # per codec, the timing draw is host-side numpy; the round
+            # index is the host counter (no device sync)
+            met.update(self._transport_met(np.asarray(client_idx),
+                                           state.round))
+        return SimState(*new_core, bits=bits, round=state.round + 1), met
+
+    # -- many rounds, one device program ------------------------------------
+    def run_rounds(self, state: SimState, client_batches, client_idx, rngs):
+        """Scan-driven multi-round execution: R rounds in one jitted
+        ``lax.scan`` with donated carry — one dispatch and one host sync
+        total, instead of R of each.
+
+        ``client_batches``: pytree with leading (R, n, K, ...);
+        ``client_idx``: (R, n); ``rngs``: PRNG keys with leading R.
+        Returns ``(new_state, mets)`` with the same per-round metric dicts
+        the :meth:`round` loop produces, bit-identical."""
+        R, n = int(client_idx.shape[0]), int(client_idx.shape[1])
+        if self._scan_fn is None:
+            def scan_rounds(core, batches, idx, keys):
+                def body(c, inp):
+                    b, i, k = inp
+                    return self._round_impl(c, b, i, k)
+                return lax.scan(body, core, (batches, idx, keys))
+            self._scan_fn = jax.jit(scan_rounds, donate_argnums=(0,))
+        idx_host = np.asarray(client_idx)
+        new_core, stacked = self._scan_fn(_CoreState(*state[:5]),
+                                          client_batches, client_idx, rngs)
+        stacked = jax.device_get(stacked)  # the single host sync
+        bpr = self._bits_per_round(n)
+        mets = []
+        for r in range(R):
+            met = {k: v[r] for k, v in stacked.items()}
+            met["bits"] = state.bits + bpr * (r + 1)
+            if self.network is not None:
+                met.update(self._transport_met(idx_host[r], state.round + r))
+            mets.append(met)
+        new_state = SimState(*new_core, bits=state.bits + bpr * R,
+                             round=state.round + R)
+        return new_state, mets
 
     def _local_train(self, params, batches):
         """K local SGD steps for ONE client. batches: (K, ...)."""
@@ -132,23 +214,26 @@ class FedSim:
             p = jax.tree.map(lambda x, gg: x - eta_l * gg, p, g)
             return p, l
 
-        local, losses = lax.scan(step, params, batches)
+        # unrolled (capped): K is static, and unrolling lets XLA fuse
+        # across local steps instead of paying while-loop overhead — same
+        # ops in the same order, numerics unchanged. The cap bounds program
+        # size for large-K configs (the body is also nested inside the
+        # run_rounds round scan).
+        k = jax.tree.leaves(batches)[0].shape[0]
+        local, losses = lax.scan(step, params, batches, unroll=min(k, 8))
         return local, jnp.mean(losses)
 
-    def _round_impl(self, state: SimState, client_batches, client_idx, rng):
-        fed = self.fed
-        n = client_idx.shape[0]
-        start = self.unravel(state.x_client)  # what clients see (== params
-        # unless two-way compression is on)
+    def _clients_block(self, start, flat0, batches, errs, pos, rng):
+        """Local training + compression for a block of clients.
 
-        local, losses = jax.vmap(lambda b: self._local_train(start, b))(client_batches)
-        flat0, _ = ravel_pytree(start)
-        delta = jax.vmap(lambda p: ravel_pytree(p)[0])(local) - flat0[None, :]
-
+        ``batches``: (c, K, ...) pytree; ``errs``: (c, d) EF errors (ignored
+        when no compressor); ``pos``: (c,) global positions in the round
+        (the per-client RNG stream). Returns (hats, new_errs, delta,
+        losses)."""
         d = flat0.size
-        gamma = jnp.zeros(())
+        local, losses = jax.vmap(lambda b: self._local_train(start, b))(batches)
+        delta = jax.vmap(lambda p: ravel_pytree(p)[0])(local) - flat0[None, :]
         if self.comp is not None:
-            errs = state.errors[client_idx]
             if self.codec is not None:
                 # wire mode: the delta really goes through encode->decode;
                 # EF tracks the *decoded* value, so narrowed wire value
@@ -161,49 +246,108 @@ class FedSim:
                 def one(dd, ee, i):
                     return ef_compress(self.comp, dd, ee,
                                        jax.random.fold_in(rng, i))
-            hats, new_errs = jax.vmap(one)(delta, errs, jnp.arange(n))
-            errors = state.errors.at[client_idx].set(new_errs)
-            agg = jnp.mean(hats, axis=0)
-            bits = state.bits + n * self.comp.bits_per_message(d)
-            # Assumption 4.17 diagnostic (paper Fig. 6):
-            #   gamma = ||C(mean(Δ+e)) − mean(C(Δ+e))|| / ||mean(Δ)||
-            c_of_mean = self.comp.compress(jnp.mean(delta + errs, axis=0),
-                                           jax.random.fold_in(rng, 999983))
-            gamma = (jnp.linalg.norm(c_of_mean - agg)
-                     / jnp.maximum(jnp.linalg.norm(jnp.mean(delta, axis=0)),
-                                   1e-12))
+            hats, new_errs = jax.vmap(one)(delta, errs, pos)
         else:
-            errors = state.errors
             if self.codec is not None:  # uncompressed algo, dense32 wire
-                delta = jax.vmap(
+                hats = jax.vmap(
                     lambda t: self.codec.decode(self.codec.encode(t), d)
                 )(delta)
-            agg = jnp.mean(delta, axis=0)
-            bits = state.bits + n * 32 * d
+            else:
+                hats = delta
+            new_errs = errs
+        return hats, new_errs, delta, losses
+
+    def _round_impl(self, core: _CoreState, client_batches, client_idx, rng):
+        fed = self.fed
+        n = client_idx.shape[0]
+        start = self.unravel(core.x_client)  # what clients see (== params
+        # unless two-way compression is on)
+        flat0 = core.x_client
+        d = flat0.size
+        pos = jnp.arange(n)
+
+        cc = fed.client_chunk
+        if cc and 0 < cc < n and n % cc:  # trace-time n may differ from
+            # the configured count __init__ validated against
+            raise ValueError(
+                f"client_chunk={cc} does not divide this round's client "
+                f"count n={n} — refusing to silently fall back to the "
+                f"full (n, d) vmap")
+        if cc and 0 < cc < n:
+            # client_chunk mode: scan the per-client train/compress/encode
+            # pipeline over n/cc chunks, gathering/scattering each chunk's
+            # EF slice inside the body and accumulating sums — peak
+            # delta/hat/error working memory is (cc, d) instead of (n, d)
+            shape_c = lambda x: x.reshape((n // cc, cc) + x.shape[1:])
+
+            def body(carry, inp):
+                b_c, i_c, p_c = inp
+                errors, s_hat, s_tot, s_delta, s_loss = carry
+                e_c = (errors[i_c] if self.comp is not None
+                       else jnp.zeros((cc, 0), jnp.float32))
+                hats, nerrs, delta, losses = self._clients_block(
+                    start, flat0, b_c, e_c, p_c, rng)
+                s_hat = s_hat + jnp.sum(hats, axis=0)
+                s_delta = s_delta + jnp.sum(delta, axis=0)
+                s_loss = s_loss + jnp.sum(losses)
+                if self.comp is not None:
+                    s_tot = s_tot + jnp.sum(delta + e_c, axis=0)
+                    errors = errors.at[i_c].set(nerrs)
+                return (errors, s_hat, s_tot, s_delta, s_loss), None
+
+            carry0 = (core.errors, jnp.zeros(d),
+                      jnp.zeros(d if self.comp is not None else 0),
+                      jnp.zeros(d), jnp.zeros(()))
+            (errors, s_hat, s_tot, s_delta, s_loss), _ = lax.scan(
+                body, carry0,
+                (jax.tree.map(shape_c, client_batches),
+                 shape_c(client_idx), shape_c(pos)))
+            hats_mean, loss = s_hat / n, s_loss / n
+            mean_tot, mean_delta = s_tot / n, s_delta / n
+        else:
+            errs = (core.errors[client_idx] if self.comp is not None
+                    else jnp.zeros((n, 0), jnp.float32))
+            hats, new_errs, delta, losses = self._clients_block(
+                start, flat0, client_batches, errs, pos, rng)
+            hats_mean, loss = jnp.mean(hats, axis=0), jnp.mean(losses)
+            if self.comp is not None:
+                mean_tot = jnp.mean(delta + errs, axis=0)
+                errors = core.errors.at[client_idx].set(new_errs)
+            else:
+                errors = core.errors
+            mean_delta = jnp.mean(delta, axis=0)
+
+        gamma = jnp.zeros(())
+        agg = hats_mean
+        if self.comp is not None:
+            # Assumption 4.17 diagnostic (paper Fig. 6):
+            #   gamma = ||C(mean(Δ+e)) − mean(C(Δ+e))|| / ||mean(Δ)||
+            c_of_mean = self.comp.compress(mean_tot,
+                                           jax.random.fold_in(rng, 999983))
+            gamma = (jnp.linalg.norm(c_of_mean - agg)
+                     / jnp.maximum(jnp.linalg.norm(mean_delta), 1e-12))
 
         # server update on the flat vector
-        xflat, _ = ravel_pytree(state.params)
-        new_flat, opt = server_update(fed, state.opt, xflat, agg)
+        xflat, _ = ravel_pytree(core.params)
+        new_flat, opt = server_update(fed, core.opt, xflat, agg)
 
         # beyond-paper: two-way (server->client) EF compression, appendix D
         if fed.two_way and self.comp is not None:
-            upd = new_flat - state.x_client
-            tot = upd + state.server_error
+            upd = new_flat - core.x_client
+            tot = upd + core.server_error
             if self.codec is not None:  # downlink exercises the codec too
                 hat = self.codec.decode(self.codec.encode(tot), d)
             else:
                 hat = self.comp.compress(tot, jax.random.fold_in(rng, 10**6))
             server_error = tot - hat
-            x_client = state.x_client + hat
+            x_client = core.x_client + hat
         else:
-            server_error = state.server_error
+            server_error = core.server_error
             x_client = new_flat
 
         new_params = self.unravel(new_flat)
-        new_state = SimState(new_params, opt, errors, server_error, x_client,
-                             bits, state.round + 1)
-        return new_state, {"loss": jnp.mean(losses), "bits": bits,
-                           "gamma": gamma}
+        new_core = _CoreState(new_params, opt, errors, server_error, x_client)
+        return new_core, {"loss": loss, "gamma": gamma}
 
 
 # ===========================================================================
@@ -569,6 +713,39 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
         return new_state, {"loss": loss, "wire_up_bytes": wire}
 
     return fed_round
+
+
+def build_fed_rounds_scan(fed_round):
+    """Lift a per-round mesh body to the scan-driven multi-round body:
+    ``(state, batches[R], seeds[R]) -> (state, stacked metrics)``. Shared by
+    core.api.FederatedTrainer and launch.train so the scan step exists in
+    exactly one place (wrap in shard_map + jit with ``donate_argnums=(0,)``
+    at the call site)."""
+
+    def rounds_fn(state, batches, seeds):
+        def body(st, inp):
+            b, s = inp
+            return fed_round(st, b, s)
+        return lax.scan(body, state, (batches, seeds))
+
+    return rounds_fn
+
+
+def scan_batch_specs(batch_specs):
+    """Per-round batch PartitionSpecs -> stacked (R, ...) specs."""
+    return jax.tree.map(lambda s: P(None, *tuple(s)), batch_specs)
+
+
+def stage_mesh_rounds(lm_data, r0: int, count: int, local_steps: int,
+                      global_batch: int, seq_len: int):
+    """Host-side staging for ``count`` mesh rounds: stacked (R, ...) batch
+    dict + (R,) int32 seeds for :func:`build_fed_rounds_scan` (shared by
+    core.api and launch.train)."""
+    raws = [lm_data.mesh_batch(r, local_steps, global_batch, seq_len)
+            for r in range(r0, r0 + count)]
+    batch = {k: jnp.asarray(np.stack([b[k] for b in raws]))
+             for k in raws[0]}
+    return batch, jnp.arange(r0, r0 + count, dtype=jnp.int32)
 
 
 def fed_batch_defs(model, fed: FedConfig, train: TrainConfig):

@@ -30,8 +30,12 @@ class ServerState(NamedTuple):
 
 
 def init_server_state(params) -> ServerState:
-    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
-    return ServerState(m=z, v=z, vhat=z, t=jnp.zeros((), jnp.int32))
+    # m, v, vhat must be DISTINCT buffers: the round executable donates the
+    # whole state, and XLA rejects donating one buffer for three parameters
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return ServerState(m=zeros(), v=zeros(), vhat=zeros(),
+                       t=jnp.zeros((), jnp.int32))
 
 
 def server_update(fed: FedConfig, state: ServerState, params, delta):

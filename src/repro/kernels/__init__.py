@@ -2,7 +2,9 @@
 path (blockwise top-k / scaled-sign, fused with error feedback) and the
 fused FedAMS server update. Validated in interpret mode against ref.py."""
 from repro.kernels.bitpack import (pack_bits, pack_bits_ref,  # noqa: F401
-                                   unpack_bits, unpack_bits_ref)
+                                   pack_uint, pack_uint_words, unpack_bits,
+                                   unpack_bits_ref, unpack_uint,
+                                   unpack_uint_words)
 from repro.kernels.fedams_update import fedams_update  # noqa: F401
 from repro.kernels.ops import KernelImpl  # noqa: F401
 from repro.kernels.sign_ef import sign_ef  # noqa: F401

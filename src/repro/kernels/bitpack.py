@@ -1,27 +1,138 @@
-"""1-bit pack/unpack as Pallas TPU kernels (the sign codec's hot loop).
+"""n-bit pack/unpack as Pallas TPU kernels (the wire formats' hot loop).
 
-The sign wire format (comm.wire) carries 1 bit per coordinate; packing
-8 sign bits into each uint8 is a pure byte-shuffle that on TPU should
-stream HBM→VMEM once per tile instead of materializing an 8× larger bit
-tensor. Each grid step packs a ``block``-bit tile: reshape to (block/8, 8),
-weight by MSB-first powers of two (matching ``jnp.packbits``'s big-endian
-bit order, which the wire format uses), and reduce. ``unpack_bits`` is the
-inverse (shift + mask against the same weights).
+The wire formats (comm.wire) carry sub-word payloads: 1 bit per coordinate
+for the sign codec, ``ceil(log2(B))`` bits per kept index for blocktopk
+(11 bits for B=2048). Packing those into a uint8 stream is a pure
+byte-shuffle that on TPU should stream HBM→VMEM once per tile — the naive
+formulation (expand every value to an ``(count, nbits)`` bit matrix, then
+``packbits``) materializes an 8–32× larger intermediate, which is exactly
+the memory traffic the wire format exists to avoid.
 
-``pack_bits_ref`` / ``unpack_bits_ref`` are the jnp oracles the kernels are
-validated against in tests/test_wire.py.
+Both directions here are *word-wise shift/or accumulations* with no bit
+matrix. MSB-first at ``nbits`` each, value slot ``s`` of the stream spans
+stream bits ``[s·nbits, (s+1)·nbits)`` and byte ``k`` spans ``[8k, 8k+8)``;
+every overlapping (k, s) pair contributes one contiguous bit run whose
+alignment is the *constant* shift ``8k + 8 − (s+1)·nbits``, so
+
+    byte_k = OR_s  shift(value_s, 8k + 8 − (s+1)·nbits)  & 0xFF
+    value_s = OR_k shift(byte_k, (s+1)·nbits − 8k − 8)   & (2^nbits − 1)
+
+With ``L = lcm(nbits, 8)`` the stream tiles into groups of ``L/nbits``
+values ↔ ``L/8`` bytes, making the (k, s) pairs a small static table the
+kernels unroll (≤ ``L/8 · (⌈8/nbits⌉+1)`` shift/or ops per group).
+
+``pack_uint_words`` / ``unpack_uint_words`` are the pure-jnp form of the
+same algorithm — the oracle the kernels are validated against in
+tests/test_wire.py, and the default path ``comm.wire`` uses under jit.
+``pack_bits_ref`` / ``unpack_bits_ref`` are the original 1-bit oracles.
+
+``interpret=None`` (default) selects the backend automatically: compiled
+Pallas on TPU, interpreter everywhere else — so the "pallas" wire paths
+run the real kernels exactly where Pallas can compile them.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK = 2048  # bits per grid step (must be a multiple of 8)
+DEFAULT_BLOCK = 2048  # bits per grid step for the 1-bit API (multiple of 8)
 
 _WEIGHTS = (128, 64, 32, 16, 8, 4, 2, 1)  # MSB-first, like jnp.packbits
+
+
+def _resolve_interpret(interpret):
+    """Backend-aware default: compile on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def group_shape(nbits: int):
+    """(values, bytes) per stream group: L/nbits and L/8 for L=lcm(nbits,8)."""
+    if not 1 <= nbits <= 32:
+        raise ValueError(f"nbits must be in [1, 32], got {nbits}")
+    lcm = math.lcm(nbits, 8)
+    return lcm // nbits, lcm // 8
+
+
+def _umask(nbits: int):
+    return jnp.uint32(((1 << nbits) - 1) & 0xFFFFFFFF)
+
+
+def _pack_pairs(nbits: int):
+    """Static (byte k) -> [(value slot s, shift)] table for one group."""
+    gv, gb = group_shape(nbits)
+    return [
+        [(s, 8 * k + 8 - (s + 1) * nbits)
+         for s in range((8 * k) // nbits,
+                        min((8 * k + 7) // nbits, gv - 1) + 1)]
+        for k in range(gb)
+    ]
+
+
+def _unpack_pairs(nbits: int):
+    """Static (value slot s) -> [(byte k, shift)] table (pack's transpose)."""
+    gv, gb = group_shape(nbits)
+    return [
+        [(k, 8 * k + 8 - (s + 1) * nbits)
+         for k in range((s * nbits) // 8,
+                        min(((s + 1) * nbits - 1) // 8, gb - 1) + 1)]
+        for s in range(gv)
+    ]
+
+
+def _shl(x, sh: int):
+    """Shift by a signed static amount (left for positive)."""
+    return x << sh if sh >= 0 else x >> -sh
+
+
+# ---------------------------------------------------------------------------
+# jnp word-wise forms (oracle + default wire path)
+# ---------------------------------------------------------------------------
+
+
+def pack_uint_words(vals, nbits: int) -> jnp.ndarray:
+    """vals: (count,) uints < 2**nbits. Returns ceil(count*nbits/8) bytes,
+    MSB-first — byte-identical to the bit-matrix formulation but without
+    ever materializing it (peak intermediate is one uint32 per output byte).
+    """
+    flat = vals.reshape(-1).astype(jnp.uint32) & _umask(nbits)
+    count = flat.size
+    gv, gb = group_shape(nbits)
+    groups = -(-count // gv)
+    v = jnp.pad(flat, (0, groups * gv - count)).reshape(groups, gv)
+    cols = []
+    for pairs in _pack_pairs(nbits):
+        acc = jnp.zeros((groups,), jnp.uint32)
+        for s, sh in pairs:
+            acc = acc | _shl(v[:, s], sh)
+        cols.append(acc & 0xFF)
+    out = jnp.stack(cols, axis=1).reshape(-1).astype(jnp.uint8)
+    return out[: (count * nbits + 7) // 8]
+
+
+def unpack_uint_words(buf, nbits: int, count: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_uint_words`: read ``count`` values (uint32)."""
+    flat = buf.reshape(-1).astype(jnp.uint32)
+    gv, gb = group_shape(nbits)
+    groups = -(-count // gv)
+    b = jnp.pad(flat, (0, max(groups * gb - flat.size, 0))).reshape(-1)
+    b = b[: groups * gb].reshape(groups, gb)
+    mask = _umask(nbits)
+    cols = []
+    for pairs in _unpack_pairs(nbits):
+        acc = jnp.zeros((groups,), jnp.uint32)
+        for k, sh in pairs:
+            acc = acc | _shl(b[:, k], -sh)
+        cols.append(acc & mask)
+    return jnp.stack(cols, axis=1).reshape(-1)[:count]
+
+
+# 1-bit oracles (kept as an independent reference for the kernels)
 
 
 def pack_bits_ref(bits):
@@ -38,55 +149,101 @@ def unpack_bits_ref(packed):
     return ((p[:, None] >> shifts) & 1).reshape(-1).astype(jnp.uint8)
 
 
-def _msb_first_shifts(rows: int):
-    # 7..0 per byte lane, built with an in-kernel iota (pallas kernels may
-    # not capture host constants)
-    return 7 - jax.lax.broadcasted_iota(jnp.int32, (rows, 8), 1)
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
 
 
-def _pack_kernel(b_ref, out_ref):
-    b = b_ref[...].reshape(-1, 8).astype(jnp.int32)
-    out_ref[...] = jnp.sum(b << _msb_first_shifts(b.shape[0]),
-                           axis=1).astype(jnp.uint8)
+def _pack_uint_kernel(v_ref, out_ref, *, nbits: int, rows: int):
+    gv, gb = group_shape(nbits)
+    v = v_ref[...].reshape(rows, gv).astype(jnp.uint32) & _umask(nbits)
+    cols = []
+    for pairs in _pack_pairs(nbits):
+        acc = jnp.zeros((rows,), jnp.uint32)
+        for s, sh in pairs:
+            acc = acc | _shl(v[:, s], sh)
+        cols.append(acc & 0xFF)
+    out_ref[...] = jnp.stack(cols, axis=1).reshape(-1).astype(jnp.uint8)
 
 
-def _unpack_kernel(p_ref, out_ref):
-    p = p_ref[...].astype(jnp.int32)
-    shifts = _msb_first_shifts(p.shape[0])
-    out_ref[...] = ((p[:, None] >> shifts) & 1).reshape(-1).astype(jnp.uint8)
+def _unpack_uint_kernel(p_ref, out_ref, *, nbits: int, rows: int):
+    gv, gb = group_shape(nbits)
+    b = p_ref[...].reshape(rows, gb).astype(jnp.uint32)
+    mask = _umask(nbits)
+    cols = []
+    for pairs in _unpack_pairs(nbits):
+        acc = jnp.zeros((rows,), jnp.uint32)
+        for k, sh in pairs:
+            acc = acc | _shl(b[:, k], -sh)
+        cols.append(acc & mask)
+    out_ref[...] = jnp.stack(cols, axis=1).reshape(-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nbits", "group_block", "interpret"))
+def pack_uint(vals, nbits: int, *, group_block: int = 256,
+              interpret=None) -> jnp.ndarray:
+    """Pallas form of :func:`pack_uint_words`: vals (count,) uints
+    < 2**nbits -> ceil(count*nbits/8) bytes. Pads internally to whole grid
+    steps of ``group_block`` stream groups; byte-identical to the jnp path.
+    """
+    flat = vals.reshape(-1).astype(jnp.uint32)
+    count = flat.size
+    gv, gb = group_shape(nbits)
+    groups = -(-count // gv)
+    gpad = -(-groups // group_block) * group_block
+    v = jnp.pad(flat, (0, gpad * gv - count))
+    out = pl.pallas_call(
+        functools.partial(_pack_uint_kernel, nbits=nbits, rows=group_block),
+        grid=(gpad // group_block,),
+        in_specs=[pl.BlockSpec((group_block * gv,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((group_block * gb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((gpad * gb,), jnp.uint8),
+        interpret=_resolve_interpret(interpret),
+    )(v)
+    return out[: (count * nbits + 7) // 8]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nbits", "count", "group_block",
+                                    "interpret"))
+def unpack_uint(buf, nbits: int, count: int, *, group_block: int = 256,
+                interpret=None) -> jnp.ndarray:
+    """Pallas inverse of :func:`pack_uint`: read ``count`` uint32 values."""
+    flat = buf.reshape(-1)
+    gv, gb = group_shape(nbits)
+    groups = -(-count // gv)
+    gpad = -(-groups // group_block) * group_block
+    b = jnp.pad(flat, (0, max(gpad * gb - flat.size, 0)))[: gpad * gb]
+    out = pl.pallas_call(
+        functools.partial(_unpack_uint_kernel, nbits=nbits, rows=group_block),
+        grid=(gpad // group_block,),
+        in_specs=[pl.BlockSpec((group_block * gb,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((group_block * gv,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((gpad * gv,), jnp.uint32),
+        interpret=_resolve_interpret(interpret),
+    )(b)
+    return out[:count]
+
+
+# -- 1-bit API (the sign codec's path; nbits=1 specialization) --------------
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def pack_bits(bits, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def pack_bits(bits, *, block: int = DEFAULT_BLOCK, interpret=None):
     """bits: (N,) uint8 in {0,1} with N % block == 0, block % 8 == 0.
     Returns (N/8,) uint8, identical to ``pack_bits_ref``."""
     assert bits.ndim == 1 and block % 8 == 0
     n = bits.shape[0]
     assert n % block == 0, (n, block)
-    grid = (n // block,)
-    return pl.pallas_call(
-        _pack_kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((block // 8,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n // 8,), jnp.uint8),
-        interpret=interpret,
-    )(bits.astype(jnp.uint8))
+    return pack_uint(bits, 1, group_block=block // 8, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def unpack_bits(packed, *, block: int = DEFAULT_BLOCK,
-                interpret: bool = True):
+def unpack_bits(packed, *, block: int = DEFAULT_BLOCK, interpret=None):
     """packed: (M,) uint8 with 8*M % block == 0. Returns (8*M,) uint8."""
     assert packed.ndim == 1 and block % 8 == 0
     m = packed.shape[0]
     assert (8 * m) % block == 0, (m, block)
-    grid = (8 * m // block,)
-    return pl.pallas_call(
-        _unpack_kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((block // 8,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((8 * m,), jnp.uint8),
-        interpret=interpret,
-    )(packed)
+    return unpack_uint(packed, 1, 8 * m, group_block=block // 8,
+                       interpret=interpret).astype(jnp.uint8)

@@ -38,6 +38,9 @@ def main(argv=None) -> None:
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--eta-l", type=float, default=0.05)
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--scan-rounds", type=int, default=0,
+                    help="scan this many rounds per device dispatch "
+                         "(0/1 = one jitted call per round)")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
@@ -86,11 +89,23 @@ def main(argv=None) -> None:
     state_specs = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
     bdefs = fed_batch_defs(model, fed, train)
     batch_specs = jax.tree.map(lambda d: d.spec, bdefs, is_leaf=pdefs.is_def)
+    # donate the federated state: params/opt-moments/EF errors update in
+    # place instead of being copied every round
     step = jax.jit(compat.shard_map(rnd, mesh=mesh,
                                  in_specs=(state_specs, batch_specs, P()),
                                  out_specs=(state_specs,
                                             {"loss": P(), "wire_up_bytes": P()}),
-                                 check_vma=True))
+                                 check_vma=True),
+                   donate_argnums=(0,))
+    scan_step = None
+    if args.scan_rounds and args.scan_rounds > 1:
+        from repro.core.rounds import build_fed_rounds_scan, scan_batch_specs
+        scan_step = jax.jit(compat.shard_map(
+            build_fed_rounds_scan(rnd), mesh=mesh,
+            in_specs=(state_specs, scan_batch_specs(batch_specs), P(None)),
+            out_specs=(state_specs, {"loss": P(None),
+                                     "wire_up_bytes": P(None)}),
+            check_vma=True), donate_argnums=(0,))
     state = init_fed_state(model, fed, jax.random.PRNGKey(train.seed))
     nparams = sum(int(np.prod(l.shape))
                   for l in jax.tree.leaves(state.params))
@@ -100,14 +115,31 @@ def main(argv=None) -> None:
     data = FederatedLMData(num_clients=max(num_clients, 1),
                            vocab_size=cfg.vocab_size, seed=train.seed)
     t0 = time.time()
-    for r in range(train.rounds):
-        raw = data.mesh_batch(r, fed.local_steps, train.global_batch,
-                              train.seq_len)
-        batch = {k: jnp.asarray(v) for k, v in raw.items()}
-        state, met = step(state, batch, jnp.int32(r))
-        if r % args.log_every == 0 or r == train.rounds - 1:
-            print(f"round {r:4d}  loss {float(met['loss']):8.4f}  "
-                  f"({time.time() - t0:.1f}s)")
+    if scan_step is not None:
+        from repro.core.rounds import stage_mesh_rounds
+        r = 0
+        while r < train.rounds:
+            chunk = min(args.scan_rounds, train.rounds - r)
+            batch, seeds = stage_mesh_rounds(data, r, chunk, fed.local_steps,
+                                             train.global_batch,
+                                             train.seq_len)
+            state, met = scan_step(state, batch, seeds)
+            losses = np.asarray(met["loss"])  # one sync per chunk
+            for i in range(chunk):
+                rr = r + i
+                if rr % args.log_every == 0 or rr == train.rounds - 1:
+                    print(f"round {rr:4d}  loss {float(losses[i]):8.4f}  "
+                          f"({time.time() - t0:.1f}s)")
+            r += chunk
+    else:
+        for r in range(train.rounds):
+            raw = data.mesh_batch(r, fed.local_steps, train.global_batch,
+                                  train.seq_len)
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            state, met = step(state, batch, jnp.int32(r))
+            if r % args.log_every == 0 or r == train.rounds - 1:
+                print(f"round {r:4d}  loss {float(met['loss']):8.4f}  "
+                      f"({time.time() - t0:.1f}s)")
     if args.checkpoint:
         from repro.checkpoint import save_pytree
         save_pytree(args.checkpoint, jax.device_get(state._asdict()),

@@ -1,0 +1,249 @@
+"""Scan-driven multi-round execution: loop/scan parity, donation safety,
+client chunking, and the host-side exact counters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, ModelConfig, TrainConfig
+from repro.core.rounds import FedSim, _CoreState
+from repro.core.sampling import sample_clients
+from repro.data.synthetic import FederatedClassification
+from repro.models import params as pdefs
+from repro.models.convmixer import MLPConfig, mlp_defs, mlp_loss
+
+MC = MLPConfig(in_dim=16, hidden=32, depth=2, num_classes=4)
+DATA = FederatedClassification(num_clients=12, num_classes=4, feature_dim=16,
+                               alpha=0.5, seed=0)
+M, N, K = 12, 4, 2
+
+
+def _make(**fed_kw):
+    kw = dict(algorithm="fedcams", eta=0.05, eta_l=0.1, local_steps=K,
+              num_clients=M, participating=N, compressor="topk",
+              compress_ratio=1 / 8)
+    kw.update(fed_kw)
+    fed = FedConfig(**kw)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed)
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+    return sim, st
+
+
+def _stage(rounds):
+    rng = jax.random.PRNGKey(1)
+    idxs, keys, batches = [], [], []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, M, N))
+        batches.append(DATA.round_batches(idx, r, K, 16))
+        idxs.append(idx)
+        keys.append(k2)
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    return stacked, jnp.asarray(np.stack(idxs)), jnp.stack(keys)
+
+
+def _flat(params):
+    return jax.flatten_util.ravel_pytree(params)[0]
+
+
+@pytest.mark.parametrize("fed_kw", [{}, {"wire": True},
+                                    {"wire": True, "two_way": True},
+                                    {"compressor": "sign"}])
+def test_scan_driver_bit_identical_to_loop(fed_kw):
+    """run_rounds == R x round: same final state AND same per-round
+    metrics, bit for bit (including wire/transport metrics)."""
+    R = 5
+    batches, idx, keys = _stage(R)
+
+    sim_l, st_l = _make(**fed_kw)
+    mets_l = []
+    for r in range(R):
+        b_r = jax.tree.map(lambda x: x[r], batches)
+        st_l, met = sim_l.round(st_l, b_r, idx[r], keys[r])
+        mets_l.append(met)
+
+    sim_s, st_s = _make(**fed_kw)
+    st_s, mets_s = sim_s.run_rounds(st_s, batches, idx, keys)
+
+    assert bool(jnp.all(_flat(st_l.params) == _flat(st_s.params)))
+    assert bool(jnp.all(st_l.errors == st_s.errors))
+    assert bool(jnp.all(st_l.server_error == st_s.server_error))
+    assert st_l.bits == st_s.bits and st_l.round == st_s.round == R
+    assert len(mets_s) == R
+    for m_l, m_s in zip(mets_l, mets_s):
+        assert set(m_l) == set(m_s)
+        for k in m_l:
+            assert float(m_l[k]) == float(m_s[k]), (k, m_l[k], m_s[k])
+
+
+def test_scan_driver_resumes_mid_stream():
+    """3 + 2 scanned rounds == 5 scanned rounds (counters carry across)."""
+    R = 5
+    batches, idx, keys = _stage(R)
+    part = lambda x, lo, hi: jax.tree.map(lambda a: a[lo:hi], x)
+
+    sim_a, st_a = _make()
+    st_a, _ = sim_a.run_rounds(st_a, *[part(x, 0, 3) for x in
+                                       (batches, idx, keys)])
+    st_a, _ = sim_a.run_rounds(st_a, *[part(x, 3, 5) for x in
+                                       (batches, idx, keys)])
+
+    sim_b, st_b = _make()
+    st_b, _ = sim_b.run_rounds(st_b, batches, idx, keys)
+    assert bool(jnp.all(_flat(st_a.params) == _flat(st_b.params)))
+    assert st_a.bits == st_b.bits and st_a.round == st_b.round
+
+
+def test_donated_round_matches_pure_computation():
+    """Donation must not alias-corrupt the EF update: the donating round
+    produces exactly what the pure (non-donated) round body computes from
+    saved copies of the same inputs."""
+    R = 3
+    batches, idx, keys = _stage(R)
+    sim, st = _make()
+    pure_fn = jax.jit(sim._round_impl)  # no donation: inputs stay live
+
+    for r in range(R):
+        b_r = jax.tree.map(lambda x: x[r], batches)
+        # deep host copies taken BEFORE the donating call consumes st
+        saved = _CoreState(*jax.tree.map(lambda x: jnp.array(np.asarray(x)),
+                                         _CoreState(*st[:5])))
+        st, _ = sim.round(st, b_r, idx[r], keys[r])
+        ref_core, _ = pure_fn(saved, b_r, idx[r], keys[r])
+        assert bool(jnp.all(st.errors == ref_core.errors)), f"round {r}"
+        assert bool(jnp.all(_flat(st.params) == _flat(ref_core.params)))
+        assert bool(jnp.all(st.x_client == ref_core.x_client))
+
+
+def test_client_chunk_bounds_match_full_vmap():
+    """client_chunk mode computes the same round (up to summation order)."""
+    R = 4
+    batches, idx, keys = _stage(R)
+    sim_f, st_f = _make()
+    sim_c, st_c = _make(client_chunk=2)
+    for r in range(R):
+        b_r = jax.tree.map(lambda x: x[r], batches)
+        st_f, met_f = sim_f.round(st_f, b_r, idx[r], keys[r])
+        st_c, met_c = sim_c.round(st_c, b_r, idx[r], keys[r])
+    np.testing.assert_allclose(np.asarray(_flat(st_c.params)),
+                               np.asarray(_flat(st_f.params)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_c.errors),
+                               np.asarray(st_f.errors), atol=1e-6)
+    assert st_c.bits == st_f.bits
+    assert float(met_c["loss"]) == pytest.approx(float(met_f["loss"]),
+                                                 abs=1e-6)
+
+
+def test_bits_counter_is_exact_python_int():
+    """The bits counter must be a host-side int: fp32 accumulation is only
+    exact below 2^24, which large-d rounds exceed per round."""
+    sim, st = _make()
+    assert isinstance(st.bits, int) and isinstance(st.round, int)
+    # simulate the large-d regime: a round increment far above 2^24 must
+    # accumulate exactly (fp32 would drop increments entirely)
+    big = st._replace(bits=int(2 ** 53))
+    incr = sim._bits_per_round(N)
+    assert big.bits + incr == 2 ** 53 + incr  # exact, no rounding
+    batches, idx, keys = _stage(1)
+    b0 = jax.tree.map(lambda x: x[0], batches)
+    st2, met = sim.round(big, b0, idx[0], keys[0])
+    assert st2.bits == 2 ** 53 + incr
+    assert met["bits"] == st2.bits
+
+
+def test_trainer_scan_rounds_matches_loop_history():
+    """FederatedTrainer.run(scan_rounds=R) reproduces the per-round loop's
+    history exactly (simulation backend)."""
+    from repro.core.api import FederatedTrainer
+
+    def make():
+        tr = FederatedTrainer(
+            fed=FedConfig(algorithm="fedcams", num_clients=8, participating=4,
+                          local_steps=2, compressor="topk",
+                          compress_ratio=1 / 8, eta=0.1, eta_l=0.1),
+            train=TrainConfig(rounds=6, log_every=100),
+            loss_fn=lambda p, b: mlp_loss(p, b, MC),
+            init_params=pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+        tr.data = FederatedClassification(num_clients=8, num_classes=4,
+                                          feature_dim=16, seed=0)
+        return tr
+
+    h_loop = make().run(log=None)
+    h_scan = make().run(scan_rounds=4, log=None)  # 4 + 2 tail chunk
+    assert len(h_loop) == len(h_scan) == 6
+    for a, b in zip(h_loop, h_scan):
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k] == b[k], (k, a[k], b[k])
+
+
+def test_client_chunk_must_divide_round_size():
+    with pytest.raises(ValueError, match="client_chunk"):
+        _make(client_chunk=3)  # n=4 participating
+
+
+def test_client_chunk_rejects_runtime_mismatch():
+    """A round whose actual client count breaks the chunking must raise,
+    not silently fall back to the full (n, d) vmap."""
+    sim, st = _make(client_chunk=2)  # valid for the configured n=4
+    batches, idx, keys = _stage(1)
+    b0 = jax.tree.map(lambda x: x[0][:3], batches)  # 3 clients at runtime
+    with pytest.raises(ValueError, match="client_chunk"):
+        sim.round(st, b0, idx[0][:3], keys[0])
+
+
+def test_init_params_survive_donation():
+    """The caller's init pytree must stay usable after the first donating
+    round (FedSim.init copies it into the state)."""
+    sim, st = _make()
+    p0 = pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0))
+    st = sim.init(p0)
+    batches, idx, keys = _stage(1)
+    b0 = jax.tree.map(lambda x: x[0], batches)
+    sim.round(st, b0, idx[0], keys[0])
+    # p0 would raise "Array has been deleted" if the state aliased it
+    assert np.isfinite(np.asarray(_flat(p0))).all()
+
+
+def test_trainer_scan_checkpoints_at_chunk_boundaries(tmp_path, monkeypatch):
+    """Scan mode snapshots once per chunk that crosses a checkpoint round
+    (mid-chunk states don't exist; the boundary state is saved)."""
+    from repro.core.api import FederatedTrainer
+    monkeypatch.chdir(tmp_path)
+    tr = FederatedTrainer(
+        fed=FedConfig(algorithm="fedcams", num_clients=8, participating=4,
+                      local_steps=2, compressor="topk", compress_ratio=1 / 8,
+                      eta=0.1, eta_l=0.1),
+        train=TrainConfig(rounds=6, log_every=100, checkpoint_every=5),
+        loss_fn=lambda p, b: mlp_loss(p, b, MC),
+        init_params=pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+    tr.data = FederatedClassification(num_clients=8, num_classes=4,
+                                      feature_dim=16, seed=0)
+    tr.run(scan_rounds=6, log=None)  # one chunk containing round 5
+    assert (tmp_path / "ckpt_round5" / "manifest.json").exists()
+
+
+def test_trainer_scan_rounds_mesh_backend():
+    """Mesh backend scan driver: same history as the per-round mesh loop."""
+    from repro.core.api import FederatedTrainer
+    from repro.data.synthetic import FederatedLMData
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import Model
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32")
+
+    def make():
+        tr = FederatedTrainer(
+            fed=FedConfig(algorithm="fedams", num_clients=1, local_steps=2,
+                          client_axes=(), eta=0.3, eta_l=0.05),
+            train=TrainConfig(global_batch=4, seq_len=16, rounds=5,
+                              remat_policy="none", log_every=100),
+            model=Model(cfg, tp=1), mesh=make_mesh((1, 1), ("data", "model")))
+        tr.lm_data = FederatedLMData(num_clients=1, vocab_size=64)
+        return tr
+
+    h_loop = make().run(log=None)
+    h_scan = make().run(scan_rounds=3, log=None)
+    assert [h["loss"] for h in h_loop] == [h["loss"] for h in h_scan]
