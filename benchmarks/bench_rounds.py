@@ -28,6 +28,12 @@ Measured on two configs:
   regime the ISSUE's motivation describes (driver overhead >> round math),
   where the scan driver's speedup is expected to clear 5×.
 
+A third dimension sweeps the local-update rule (core/local.py): scan-driver
+throughput for sgd / sgdm / prox plus the eta_l_decay and heterogeneous-K
+scenario knobs on the overhead-bound config — the sgd number doubles as the
+regression gate for the rounds-monolith → layered-engine split (the split
+must cost no scan-driver throughput).
+
 Writes everything to ``BENCH_rounds.json`` at the repo root (via
 benchmarks.common) so the perf trajectory is tracked across PRs.
 """
@@ -103,7 +109,7 @@ def _run_legacy(sim, fn, st, data, cfg, idx_host, keys, rounds: int):
                                  cfg["batch"])
         b = jax.tree.map(jnp.asarray, raw)
         core, met = fn(_CoreState(*st[:5]), b, jnp.asarray(idx_host[r]),
-                       keys[r])
+                       keys[r], jnp.int32(r))
         bits += sim._bits_per_round(idx_host.shape[1])
         met = dict(met)
         met["bits"] = bits
@@ -180,6 +186,43 @@ def measure(cfg, rounds: int) -> dict:
     }
 
 
+def measure_local_rules(rounds: int) -> dict:
+    """The local-rule dimension (core/local.py): scan-driver throughput per
+    rule on the overhead-bound config. sgd is the pre-split round — its
+    number is the stage-split regression gate; sgdm/prox show what the
+    extra local state/ops cost inside the same scanned pipeline."""
+    cfg = OVERHEAD
+    data = FederatedClassification(num_clients=FED_KW["num_clients"],
+                                   num_classes=cfg["mlp"]["num_classes"],
+                                   feature_dim=cfg["mlp"]["in_dim"], seed=0)
+    batches, idx, keys, _ = _stage(data, cfg, rounds)
+    out = {}
+    for rule_kw in ({"local_opt": "sgd"},
+                    {"local_opt": "sgdm"},
+                    {"local_opt": "prox"},
+                    {"local_opt": "sgd", "eta_l_decay": 0.99},
+                    {"local_opt": "sgd", "local_steps_min": 1}):
+        name = rule_kw["local_opt"]
+        if "eta_l_decay" in rule_kw:
+            name = "sgd+decay"
+        elif "local_steps_min" in rule_kw:
+            name = "sgd+heteroK"
+        mc = MLPConfig(**cfg["mlp"])
+        kw = dict(FED_KW, **{k: cfg[k] for k in ("eta", "eta_l") if k in cfg})
+        kw.update(rule_kw)
+        fed = FedConfig(local_steps=cfg["local_steps"], **kw)
+        sim = FedSim(lambda p, b, mc=mc: mlp_loss(p, b, mc), fed)
+        st = sim.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+        _run_scan(sim, st, batches, idx, keys)  # warmup
+        st = _fresh_state(sim, cfg)
+        t0 = time.perf_counter()
+        st, met = _run_scan(sim, st, batches, idx, keys)
+        jax.block_until_ready(st.params)
+        out[name] = {"scan_rounds_per_s": rounds / (time.perf_counter() - t0),
+                     "final_loss": met["loss"]}
+    return out
+
+
 def main():
     rounds = 30 if QUICK else 120
     payload = {
@@ -206,6 +249,12 @@ def main():
             f"speedup_vs_legacy={p['speedup_scan_vs_legacy']:.1f}x;"
             f"speedup_vs_loop={p['speedup_scan_vs_loop']:.1f}x;"
             f"wire_MBps={p['scan_wire_bytes_per_s']/1e6:.1f}"))
+    lr = measure_local_rules(rounds)
+    payload["local_rules"] = lr
+    for name, p in lr.items():
+        rows.append(csv_row(
+            f"rounds_local_{name}", 1e6 * (1 / p["scan_rounds_per_s"]),
+            f"rounds_per_s={p['scan_rounds_per_s']:.1f}"))
     update_bench_json(payload)
     return rows
 

@@ -9,7 +9,7 @@ through a simulated network:
                   per-round wall-clock simulation
     metrics.py    cumulative byte/time accounting (``CommLog``)
 
-Enable end-to-end with ``FedConfig(wire=True)`` (see core.rounds.FedSim):
+Enable end-to-end with ``FedConfig(wire=True)`` (see core.sim.FedSim):
 every client delta is encoded to packed bytes, timed through the network,
 and decoded server-side; ``FederatedTrainer.history`` then carries
 ``wire_bytes`` / ``round_time_s`` alongside the analytic ``bits``.

@@ -32,7 +32,7 @@ Bit-exactness: with the default ``value_dtype="float32"``,
 ``lax.top_k`` selection, same scatter; the sign codec and ``make_sign``
 share the sign(0) := +1 convention). Narrower value dtypes round the kept
 values through fp16/bf16/int8; error feedback stays exact because the
-integration tracks the *decoded* value (core.rounds wire mode).
+integration tracks the *decoded* value (core.sim wire mode).
 
 Everything here is jit-safe: shapes depend only on ``d`` and the codec
 config, so encode/decode trace into fixed-size byte-shuffling that runs

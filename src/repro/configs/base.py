@@ -210,6 +210,16 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 
+#: Known values for the validated FedConfig string fields (a typo should
+#: fail at construction, not deep inside the traced server_update).
+FED_ALGORITHMS = ("fedavg", "fedadagrad", "fedadam", "fedyogi",
+                  "fedamsgrad", "fedams", "fedcams")
+FED_COMPRESSORS = ("topk", "blocktopk", "sign", "packedsign", "randk",
+                   "int8", "none", "identity")
+FED_AGGREGATIONS = ("dense", "sparse")
+FED_LOCAL_OPTS = ("sgd", "sgdm", "prox")
+
+
 @dataclass(frozen=True)
 class FedConfig:
     """The paper's algorithm family, selectable per-experiment."""
@@ -222,6 +232,20 @@ class FedConfig:
     beta2: float = 0.99
     eps: float = 1e-3              # max-stabilization epsilon
     local_steps: int = 4           # K
+    # -- local-update rule (core/local.py, DESIGN.md §8): how a client turns
+    # K gradients into its delta. The convergence theory is agnostic to it;
+    # "sgd" is the paper's plain local SGD (bit-identical default).
+    local_opt: str = "sgd"         # sgd | sgdm | prox
+    local_momentum: float = 0.9    # heavy-ball beta for local_opt="sgdm"
+    prox_mu: float = 0.01          # proximal strength for local_opt="prox"
+    # Per-round local LR schedule: round t trains at eta_l * eta_l_decay^t.
+    # 1.0 = constant (bit-identical to the unscheduled round).
+    eta_l_decay: float = 1.0
+    # Heterogeneous per-client local work: when > 0, client i runs
+    # K_i ~ Uniform{local_steps_min..local_steps} steps this round (masked
+    # inside the scanned local step, so the trace stays static-shaped).
+    # 0 = every client runs the full local_steps.
+    local_steps_min: int = 0
     num_clients: int = 16          # m
     participating: int = 0         # n; 0 => full participation
     compressor: str = "topk"       # topk|blocktopk|sign|packedsign|randk|int8|none
@@ -248,6 +272,25 @@ class FedConfig:
     # all-gathered once per round.
     shard_server_state: bool = False
     state_shards: int = 0          # resolved from the mesh by launch.steps
+
+    def __post_init__(self):
+        def check(field, value, known):
+            if value not in known:
+                raise ValueError(
+                    f"FedConfig.{field}={value!r} is not one of {known}")
+        check("algorithm", self.algorithm, FED_ALGORITHMS)
+        check("option", self.option, (1, 2))
+        check("compressor", self.compressor, FED_COMPRESSORS)
+        check("aggregation", self.aggregation, FED_AGGREGATIONS)
+        check("local_opt", self.local_opt, FED_LOCAL_OPTS)
+        check("wire_pack_impl", self.wire_pack_impl, ("jnp", "pallas"))
+        if not 0.0 < self.eta_l_decay <= 1.0:
+            raise ValueError(
+                f"FedConfig.eta_l_decay={self.eta_l_decay} must be in (0, 1]")
+        if self.local_steps_min < 0 or self.local_steps_min > self.local_steps:
+            raise ValueError(
+                f"FedConfig.local_steps_min={self.local_steps_min} must be "
+                f"in [0, local_steps={self.local_steps}]")
 
 
 @dataclass(frozen=True)

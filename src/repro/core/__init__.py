@@ -1,14 +1,16 @@
 """The paper's contribution: FedAMS / FedCAMS and their substrate.
 
-Public surface: compressors, error feedback, server optimizers, and the two
-round executors (FedSim simulation + build_fed_round mesh SPMD)."""
+Public surface: compressors, error feedback, local-update rules, server
+optimizers, the shared round stages, and the two round backends (core/sim.py
+FedSim simulation + core/mesh.py build_fed_round mesh SPMD)."""
 from repro.core.api import FederatedTrainer  # noqa: F401
 from repro.core.compressors import Compressor, make_compressor  # noqa: F401
 from repro.core.error_feedback import ef_compress, ef_compress_masked  # noqa: F401
-from repro.core.rounds import (FedMeshState, FedSim, SimState,  # noqa: F401
-                               build_fed_round, fed_batch_defs,
-                               fed_state_defs, init_fed_state,
-                               mesh_wire_bytes)
+from repro.core.local import LocalUpdate, make_local_update  # noqa: F401
+from repro.core.mesh import (FedMeshState, build_fed_round,  # noqa: F401
+                             fed_batch_defs, fed_state_defs, init_fed_state,
+                             mesh_wire_bytes)
 from repro.core.sampling import participation_mask, sample_clients  # noqa: F401
 from repro.core.server_opt import (ServerState, init_server_state,  # noqa: F401
                                    server_update)
+from repro.core.sim import FedSim, SimState  # noqa: F401

@@ -21,8 +21,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import FedConfig, TrainConfig
-from repro.core.rounds import (FedSim, build_fed_round, fed_batch_defs,
-                               fed_state_defs, init_fed_state)
+from repro.core.mesh import (build_fed_round, fed_batch_defs,
+                             fed_state_defs, init_fed_state)
+from repro.core.sim import FedSim
 from repro.core.sampling import sample_clients
 from repro.models import params as pdefs
 from repro.sharding.rules import ParallelContext
@@ -93,8 +94,8 @@ class FederatedTrainer:
         """Lazily build the scan-driven mesh step: R rounds of stacked
         batches/seeds scanned inside one shard_map (jit retraces per R)."""
         if self._scan_step is None:
-            from repro.core.rounds import (build_fed_rounds_scan,
-                                           scan_batch_specs)
+            from repro.core.mesh import (build_fed_rounds_scan,
+                                         scan_batch_specs)
             self._scan_step = jax.jit(compat.shard_map(
                 build_fed_rounds_scan(self._rnd), mesh=self.mesh,
                 in_specs=(self._ssp, scan_batch_specs(self._bsp), P(None)),
@@ -149,7 +150,7 @@ class FederatedTrainer:
                     self._state, mets = self._sim.run_rounds(
                         self._state, batches, idx, keys)
                 else:
-                    from repro.core.rounds import stage_mesh_rounds
+                    from repro.core.mesh import stage_mesh_rounds
                     batches, seeds = stage_mesh_rounds(
                         self.lm_data, r, chunk, self.fed.local_steps,
                         self.train.global_batch, self.train.seq_len)

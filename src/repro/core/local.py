@@ -1,0 +1,163 @@
+"""Pluggable local-update rules — how a client turns K gradients into its
+delta (DESIGN.md §8).
+
+The paper's convergence story (Theorems 4.19/4.22) only needs the local
+phase to produce a bounded-drift delta; the *rule* that produces it is a
+first-class axis (Reddi et al. 2020 vary server adaptivity against plain
+local SGD; Wu et al. 2023 add local momentum/variance reduction). Both
+round backends (core/sim.py, core/mesh.py) consume the same abstraction:
+
+    rule = make_local_update(fed)
+    carry = rule.init_carry(params)                    # per-client, per-round
+    params, carry = rule.step(params, carry, grads, eta_l, anchor)
+
+``anchor`` is the round-start model (the proximal reference point). Rules:
+
+    sgd   : x ← x − η_l·g                  (paper Algorithm 1; bit-identical
+                                            to the pre-split hardcoded step)
+    sgdm  : u ← β·u + g;  x ← x − η_l·u    (heavy-ball local momentum)
+    prox  : x ← x − η_l·(g + μ·(x − x₀))   (FedProx proximal regularization)
+
+Scenario knobs that modulate the local phase live here too:
+
+* :func:`local_lr` — the per-round local LR schedule
+  (``FedConfig.eta_l_decay``); returns the plain Python float when the
+  schedule is off so the unscheduled round stays bit-identical.
+* :func:`hetero_step_counts` — heterogeneous per-client step counts
+  (``FedConfig.local_steps_min``): client i runs K_i ~ U{min..K} steps,
+  realized by masking inside the scanned step (static trace shape).
+* :func:`run_local_steps` — the shared K-step ``lax.scan`` driver over a
+  backend-specific ``grad_fn``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import FedConfig
+
+#: rng salt for the heterogeneous-K draw — distinct from the compression
+#: (per-client index), gamma (999983) and two-way (10**6) folds of the
+#: shared round rng.
+_HETERO_SALT = 7321991
+
+
+class LocalUpdate(NamedTuple):
+    """A local optimizer rule: per-client state plus one-step transition.
+
+    ``init_carry(params) -> carry`` allocates the rule's per-client state at
+    round start (``()`` for stateless rules — adds nothing to the scan
+    carry). ``step(params, carry, grads, eta_l, anchor) -> (params, carry)``
+    applies one local step; ``grads`` arrive pre-scaled/pre-cast by the
+    backend so the rule is pure pytree math shared by sim and mesh."""
+    name: str
+    init_carry: Callable
+    step: Callable
+
+
+def make_local_update(fed: FedConfig) -> LocalUpdate:
+    """Build the configured local rule (``FedConfig.local_opt``)."""
+    if fed.local_opt == "sgd":
+
+        def init_carry(params):
+            return ()
+
+        def step(p, c, g, eta_l, anchor):
+            return jax.tree.map(lambda x, gg: x - eta_l * gg, p, g), ()
+
+    elif fed.local_opt == "sgdm":
+        beta = fed.local_momentum
+
+        def init_carry(params):
+            return jax.tree.map(jnp.zeros_like, params)
+
+        def step(p, u, g, eta_l, anchor):
+            u = jax.tree.map(lambda uu, gg: beta * uu + gg, u, g)
+            return jax.tree.map(lambda x, uu: x - eta_l * uu, p, u), u
+
+    elif fed.local_opt == "prox":
+        mu = fed.prox_mu
+
+        def init_carry(params):
+            return ()
+
+        def step(p, c, g, eta_l, anchor):
+            new = jax.tree.map(
+                lambda x, gg, x0: x - eta_l * (gg + mu * (x - x0)),
+                p, g, anchor)
+            return new, ()
+
+    else:  # unreachable: FedConfig validates local_opt at construction
+        raise ValueError(f"unknown local_opt {fed.local_opt!r}")
+    return LocalUpdate(fed.local_opt, init_carry, step)
+
+
+def local_lr(fed: FedConfig, round_idx):
+    """η_l for this round: ``eta_l · eta_l_decay^t``.
+
+    Returns the plain Python float when the schedule is off
+    (``eta_l_decay == 1.0``) — the multiply then stays weak-typed exactly
+    as the pre-schedule round traced it, preserving bit-identity."""
+    if fed.eta_l_decay == 1.0:
+        return fed.eta_l
+    decay = jnp.float32(fed.eta_l_decay)
+    return fed.eta_l * jnp.power(decay, jnp.asarray(round_idx, jnp.float32))
+
+
+def hetero_step_counts(fed: FedConfig, rng, count: int):
+    """(count,) int32 per-client step counts K_i ~ U{local_steps_min..K},
+    or ``None`` when heterogeneity is off (``local_steps_min == 0``).
+
+    Drawn from the shared round rng, so every device (mesh) / the loop and
+    scan drivers (sim) agree on each client's K_i."""
+    if not fed.local_steps_min:
+        return None
+    return jax.random.randint(
+        jax.random.fold_in(rng, _HETERO_SALT), (count,),
+        fed.local_steps_min, fed.local_steps + 1, dtype=jnp.int32)
+
+
+def run_local_steps(rule: LocalUpdate, grad_fn: Callable, params, batches,
+                    eta_l, k_i: Optional[jax.Array] = None,
+                    unroll: int = 1):
+    """Scan K local steps of ``rule`` over ``batches`` (leading dim K).
+
+    ``grad_fn(params, batch) -> (loss, grads)`` is the backend-specific
+    gradient: the sim passes plain ``value_and_grad``; the mesh folds in
+    its hierarchical data-parallel rescale and param-dtype cast. ``k_i``
+    (traced scalar) masks steps ``t >= k_i`` to no-ops — params, carry and
+    loss freeze — so heterogeneous per-client step counts keep a static
+    trace shape. Returns ``(local_params, mean_loss)`` where the mean is
+    over the steps actually executed."""
+    anchor = params
+    carry0 = rule.init_carry(params)
+    if k_i is None:
+
+        def step(pc, b):
+            p, c = pc
+            l, g = grad_fn(p, b)
+            p, c = rule.step(p, c, g, eta_l, anchor)
+            return (p, c), l
+
+        (local, _), losses = lax.scan(step, (params, carry0), batches,
+                                      unroll=unroll)
+        return local, jnp.mean(losses)
+
+    k = jax.tree.leaves(batches)[0].shape[0]
+
+    def step(pc, inp):
+        t, b = inp
+        p, c = pc
+        l, g = grad_fn(p, b)
+        pn, cn = rule.step(p, c, g, eta_l, anchor)
+        active = t < k_i
+        p = jax.tree.map(lambda old, new: jnp.where(active, new, old), p, pn)
+        c = jax.tree.map(lambda old, new: jnp.where(active, new, old), c, cn)
+        return (p, c), jnp.where(active, l, 0.0)
+
+    (local, _), losses = lax.scan(
+        step, (params, carry0), (jnp.arange(k), batches), unroll=unroll)
+    return local, jnp.sum(losses) / jnp.maximum(k_i, 1).astype(losses.dtype)

@@ -1,0 +1,345 @@
+"""The production mesh backend (DESIGN.md §1, §3, §5).
+
+``build_fed_round`` returns the per-device SPMD round body (shard_map):
+each index of the client axes IS one client holding a tensor-parallel
+model replica; FedCAMS compression applies to the client-axis collective
+(dense psum or the beyond-paper sparse/packed aggregation — DESIGN.md §3).
+Per-client error-feedback state lives sharded on the client axes. The
+local phase runs the configured core/local.py rule; the uplink composes
+the shared core/stages.py mesh stages. The paper-faithful simulation
+backend lives in core/sim.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.configs.base import FedConfig, TrainConfig
+from repro.core.compressors import make_compressor
+from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
+                              run_local_steps)
+from repro.core.sampling import participation_mask
+from repro.core.server_opt import ServerState, server_update
+from repro.core.stages import mesh_uplink
+from repro.models import params as pdefs
+from repro.sharding.rules import ParallelContext
+
+
+class FedMeshState(NamedTuple):
+    params: object     # pytree, TP-sharded
+    m: object          # server momentum    (fp32, like params)
+    v: object          # server variance
+    vhat: object       # max-stabilized variance
+    errors: object     # per-client EF errors: leading client dim
+    round: jax.Array
+
+
+def client_batch_axes(fed: FedConfig) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    axes = tuple(fed.client_axes)
+    if "data" not in axes:
+        axes = axes + ("data",)
+    return axes
+
+
+def state_shard_axes(fed: FedConfig):
+    """Mesh axes the server state shards over (ZeRO mode)."""
+    return tuple(fed.client_axes) if fed.client_axes else ("data",)
+
+
+def state_shard_dim(dref: pdefs.ParamDef, shards: int):
+    """First dim of a leaf that can host the server-state shard, or None."""
+    if shards <= 1:
+        return None
+    for i, (size, sp) in enumerate(zip(dref.shape, dref.spec)):
+        if sp is None and size % shards == 0 and size >= shards:
+            return i
+    return None
+
+
+def fed_state_defs(model, fed: FedConfig):
+    """ParamDef tree for the full federated state (GLOBAL shapes)."""
+    par = model.defs()
+
+    def fp32(dref: pdefs.ParamDef) -> pdefs.ParamDef:
+        import dataclasses
+        return dataclasses.replace(dref, dtype="float32")
+
+    def opt_leaf(dref: pdefs.ParamDef) -> pdefs.ParamDef:
+        import dataclasses
+        dref = fp32(dref)
+        if fed.shard_server_state:
+            sd = state_shard_dim(dref, fed.state_shards)
+            if sd is not None:
+                axes = state_shard_axes(fed)
+                spec = list(dref.spec)
+                spec[sd] = axes[0] if len(axes) == 1 else tuple(axes)
+                dref = dataclasses.replace(dref, spec=P(*spec))
+        return dref
+
+    def client_stacked(dref: pdefs.ParamDef) -> pdefs.ParamDef:
+        import dataclasses
+        if not fed.client_axes:
+            ax = None
+        elif len(fed.client_axes) == 1:
+            ax = fed.client_axes[0]
+        else:
+            ax = tuple(fed.client_axes)
+        return dataclasses.replace(
+            dref, shape=(fed.num_clients,) + tuple(dref.shape),
+            spec=P(ax, *dref.spec), dtype="float32")
+
+    opt = jax.tree.map(opt_leaf, par, is_leaf=pdefs.is_def)
+    errors = jax.tree.map(client_stacked, par, is_leaf=pdefs.is_def)
+    return FedMeshState(
+        params=par, m=opt, v=opt, vhat=opt, errors=errors,
+        round=pdefs.ParamDef((), P(), dtype="int32", init="zeros"))
+
+
+def init_fed_state(model, fed: FedConfig, rng) -> FedMeshState:
+    defs = fed_state_defs(model, fed)
+    params = pdefs.init_params(defs.params, rng)
+    zeros = lambda t: jax.tree.map(
+        lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), t, is_leaf=pdefs.is_def)
+    return FedMeshState(params=params, m=zeros(defs.m), v=zeros(defs.v),
+                        vhat=zeros(defs.vhat), errors=zeros(defs.errors),
+                        round=jnp.zeros((), jnp.int32))
+
+
+def _sharded_server_update(fed: FedConfig, st: ServerState, params, agg,
+                           model, ctx: ParallelContext):
+    """ZeRO-style server step: each index along the state-shard axes owns a
+    slice of (m, v, v̂); it updates its slice of x from its slice of the
+    aggregate and the refreshed params are all-gathered back (invariant vma).
+    Leaves too small to shard stay replicated and update normally."""
+    axes = state_shard_axes(fed)
+    shards = fed.state_shards
+    # linear index along the shard axes
+    idx = 0
+    for ax in axes:
+        idx = idx * lax.psum(1, ax) + lax.axis_index(ax)
+
+    defs = model.defs()
+    dims = jax.tree.map(lambda d: state_shard_dim(d, shards), defs,
+                        is_leaf=pdefs.is_def)
+
+    def take(leaf, sd):
+        if sd is None:
+            return leaf
+        chunk = leaf.shape[sd] // shards
+        return lax.dynamic_slice_in_dim(leaf, idx * chunk, chunk, axis=sd)
+
+    p_sh = jax.tree.map(take, params, dims)
+    agg_sh = jax.tree.map(take, agg, dims)
+    st_sh = ServerState(m=st.m, v=st.v, vhat=st.vhat, t=st.t)  # already shards
+    newp_sh, new_st = server_update(fed, st_sh, p_sh, agg_sh)
+
+    def gather(newp, oldp, sd):
+        if sd is None:
+            return newp
+        x = newp
+        for ax in axes:
+            try:
+                from jax._src.lax.parallel import all_gather_invariant
+                x = all_gather_invariant(x, ax, axis=sd, tiled=True)
+            except ImportError:  # pragma: no cover
+                x = lax.all_gather(x, ax, axis=sd, tiled=True)
+        return x.astype(oldp.dtype)
+
+    new_params = jax.tree.map(gather, newp_sh, params, dims)
+    return new_params, new_st
+
+
+# -- the round ---------------------------------------------------------------
+
+
+def mesh_wire_bytes(fed: FedConfig, delta_tree, block: int = 2048,
+                    tp: int = 1) -> int:
+    """Measured per-client contribution bytes for one mesh round's
+    client-axis collective, sized to what the aggregation paths *actually*
+    move per leaf: ``stages.sparse_topk_leaf`` gathers uint32 global indices
+    + fp32 values for the kept coordinates (8 bytes each),
+    ``stages.packed_sign_leaf`` gathers the 8→1 packed sign bits + one fp32
+    scale, and the dense psum carries ``delta_dtype`` words. (Collectives
+    carry no per-message header, unlike the comm.wire point-to-point
+    codecs.)
+
+    ``delta_tree`` holds this device's *local* shards; every one of the
+    client's ``tp`` model-parallel devices pushes its own payload into the
+    client-axis collective (model-replicated leaves included — each device
+    sends its copy), so the client's wire traffic is the local total × tp.
+    """
+    from repro.core.compressors import block_layout
+    sparse = fed.algorithm == "fedcams" and fed.aggregation == "sparse"
+    total = 0
+    for leaf in jax.tree.leaves(delta_tree):
+        dl = int(np.prod(leaf.shape))
+        if sparse and fed.compressor in ("topk", "blocktopk"):
+            bs, nb = block_layout(dl, block)
+            kb = max(1, int(round(fed.compress_ratio * bs)))
+            total += nb * kb * 8          # uint32 index + fp32 value
+        elif sparse and fed.compressor == "packedsign":
+            total += (dl + 7) // 8 + 4    # 1 bit/coord + fp32 scale
+        else:
+            total += dl * jnp.dtype(fed.delta_dtype).itemsize
+    return total * max(tp, 1)
+
+
+def build_fed_round(model, fed: FedConfig, train: TrainConfig,
+                    ctx: ParallelContext, *, chunk: int = 2048,
+                    kernel_impl: Optional[object] = None):
+    """Returns fed_round(state, batch, seed) — the per-device SPMD function
+    (wrap in shard_map + jit via launch.train / launch.dryrun)."""
+    # On the mesh, deltas are per-leaf shards (billions of elements for the
+    # large archs): global top-k is ill-defined and lax.top_k overflows int32
+    # indices, so "topk" means the blockwise TPU kernel semantics here
+    # (DESIGN.md §3; contraction bound unchanged). Exact global top-k lives
+    # in the FedSim simulation path.
+    comp_name = "blocktopk" if fed.compressor == "topk" else fed.compressor
+    comp = (make_compressor(comp_name, fed.compress_ratio)
+            if fed.algorithm == "fedcams" else None)
+    rule = make_local_update(fed)
+    m_clients = fed.num_clients
+    n_part = fed.participating or m_clients
+    hierarchical = "data" not in fed.client_axes  # within-client DP on "data"
+
+    def local_loss(p, b):
+        return model.loss(p, b, ctx, remat_policy=train.remat_policy,
+                          chunk=chunk)
+
+    # TP gradient correctness relies on shard_map's varying-manual-axes
+    # tracking (check_vma=True at every launch-site shard_map): jax then
+    # transposes the forward psums correctly, so gradients of both sharded
+    # and replicated parameters are exact — verified against the tp=1 model
+    # in tests/test_sharding.py.
+
+    def fed_round(state: FedMeshState, batch, seed):
+        params = state.params
+
+        # Clients must diverge during local training: mark the replicated
+        # global params as VARYING over the client axes (lax.pvary — a
+        # vma-type cast, no communication) so shard_map's vma autodiff does
+        # NOT sum gradients across clients. In hierarchical mode the "data"
+        # axis stays replicated, so the automatic gradient psum over "data"
+        # implements within-client data parallelism (we rescale sum->mean).
+        def _pvary(t):
+            if not fed.client_axes:
+                return t
+            return jax.tree.map(
+                lambda x: compat.pvary(x, tuple(fed.client_axes)), t)
+
+        local0 = _pvary(params)
+
+        # shared randomness -> identical draws on every device; also feeds
+        # participation and the heterogeneous-K draw below
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+
+        def grad_fn(p, b):
+            (l, _), g = jax.value_and_grad(local_loss, has_aux=True)(p, b)
+            if hierarchical:
+                g = jax.tree.map(lambda x: x / ctx.dp, g)
+            # pre-cast to param dtype so the rule's update math runs in the
+            # param dtype exactly as the pre-split step did
+            g = jax.tree.map(lambda x, gg: gg.astype(x.dtype), p, g)
+            return l, g
+
+        eta_l = local_lr(fed, state.round)
+        k_all = hetero_step_counts(fed, rng, m_clients)
+        k_i = None if k_all is None else k_all[ctx.client_index()]
+        local, loss_local = run_local_steps(rule, grad_fn, local0, batch,
+                                            eta_l, k_i=k_i)
+        delta = jax.tree.map(lambda a, b_: (a - b_).astype(jnp.float32),
+                             local, local0)
+
+        # participation (same mask on every device via the shared rng)
+        mask = participation_mask(jax.random.fold_in(rng, 1), m_clients, n_part)
+        my_mask = mask[ctx.client_index()]
+        n_eff = float(n_part)
+
+        my_err = jax.tree.map(lambda e: e[0], state.errors)  # local client slice
+        agg, new_err = mesh_uplink(fed, comp, ctx, kernel_impl, rng,
+                                   delta, my_err, my_mask, n_eff)
+
+        # server update (replicated elementwise math on sharded leaves)
+        st = ServerState(m=state.m, v=state.v, vhat=state.vhat, t=state.round)
+        if kernel_impl is not None and fed.algorithm in ("fedams", "fedcams"):
+            new_params, new_st = kernel_impl.fedams_update_tree(fed, st, params, agg)
+        elif fed.shard_server_state and fed.state_shards > 1:
+            new_params, new_st = _sharded_server_update(fed, st, params, agg,
+                                                        model, ctx)
+        else:
+            new_params, new_st = server_update(fed, st, params, agg)
+
+        errors = jax.tree.map(lambda e, ne: e.at[0].set(ne),
+                              state.errors, new_err)
+        loss = ctx.pmean_clients(loss_local)
+        if hierarchical:
+            loss = ctx.pmean_data(loss)
+        new_state = FedMeshState(params=new_params, m=new_st.m, v=new_st.v,
+                                 vhat=new_st.vhat, errors=errors,
+                                 round=new_st.t)
+        # measured uplink bytes this round (trace-time constant, replicated);
+        # same key/semantics as FedSim wire mode's per-round uplink metric.
+        # All m client-axis devices feed the collective — non-participants
+        # contribute masked zeros that still occupy wire — so the factor is
+        # m, not n_part.
+        wire = jnp.float32(
+            m_clients * mesh_wire_bytes(fed, delta, tp=ctx.tp))
+        return new_state, {"loss": loss, "wire_up_bytes": wire}
+
+    return fed_round
+
+
+def build_fed_rounds_scan(fed_round):
+    """Lift a per-round mesh body to the scan-driven multi-round body:
+    ``(state, batches[R], seeds[R]) -> (state, stacked metrics)``. Shared by
+    core.api.FederatedTrainer and launch.train so the scan step exists in
+    exactly one place (wrap in shard_map + jit with ``donate_argnums=(0,)``
+    at the call site)."""
+
+    def rounds_fn(state, batches, seeds):
+        def body(st, inp):
+            b, s = inp
+            return fed_round(st, b, s)
+        return lax.scan(body, state, (batches, seeds))
+
+    return rounds_fn
+
+
+def scan_batch_specs(batch_specs):
+    """Per-round batch PartitionSpecs -> stacked (R, ...) specs."""
+    return jax.tree.map(lambda s: P(None, *tuple(s)), batch_specs)
+
+
+def stage_mesh_rounds(lm_data, r0: int, count: int, local_steps: int,
+                      global_batch: int, seq_len: int):
+    """Host-side staging for ``count`` mesh rounds: stacked (R, ...) batch
+    dict + (R,) int32 seeds for :func:`build_fed_rounds_scan` (shared by
+    core.api and launch.train)."""
+    raws = [lm_data.mesh_batch(r, local_steps, global_batch, seq_len)
+            for r in range(r0, r0 + count)]
+    batch = {k: jnp.asarray(np.stack([b[k] for b in raws]))
+             for k in raws[0]}
+    return batch, jnp.arange(r0, r0 + count, dtype=jnp.int32)
+
+
+def fed_batch_defs(model, fed: FedConfig, train: TrainConfig):
+    """GLOBAL batch defs with client-axis sharding, leading K dim."""
+    b = model.train_batch_defs(train.global_batch, train.seq_len)
+    axes = client_batch_axes(fed)
+    ax = axes[0] if len(axes) == 1 else tuple(axes)
+
+    def stack_k(d: pdefs.ParamDef):
+        import dataclasses
+        spec = list(d.spec)
+        spec[0] = ax  # batch dim over client (+data) axes
+        return dataclasses.replace(
+            d, shape=(fed.local_steps,) + tuple(d.shape), spec=P(None, *spec))
+
+    return jax.tree.map(stack_k, b, is_leaf=pdefs.is_def)

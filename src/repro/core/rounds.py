@@ -1,764 +1,31 @@
-"""The federated round — the paper's Algorithms 1 & 2 — in two executions.
+"""Compatibility façade over the layered round engine (DESIGN.md §1, §8).
 
-``FedSim``
-    Pure-array simulation: m clients (default 100), vmapped local SGD,
-    *global-vector* compression exactly as the paper evaluates it. Runs on
-    one CPU device; powers the paper-faithful benchmarks and examples.
+The former rounds monolith is split into four layers; this module re-exports
+the public (and historically-imported) names so existing imports keep
+working. New code should import from the layer modules directly:
 
-``build_fed_round``
-    Production mesh execution (shard_map): each index of the client axes IS
-    one client holding a tensor-parallel model replica; FedCAMS compression
-    applies to the client-axis collective (dense psum or the beyond-paper
-    sparse/packed aggregation — DESIGN.md §3). Per-client error-feedback
-    state lives sharded on the client axes.
+* ``core/local.py``  — pluggable local-update rules (sgd/sgdm/prox), the
+  per-round local LR schedule, heterogeneous per-client step counts.
+* ``core/stages.py`` — the shared EF→compress→wire stages and the mesh
+  aggregation strategies.
+* ``core/sim.py``    — ``FedSim``, the paper-faithful simulation backend.
+* ``core/mesh.py``   — ``build_fed_round`` and the production SPMD backend.
 """
-from __future__ import annotations
-
-import functools
-from typing import Callable, NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.flatten_util import ravel_pytree
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
-from repro.configs.base import FedConfig, TrainConfig
-from repro.core.compressors import Compressor, make_compressor
-from repro.core.error_feedback import ef_compress, ef_compress_masked
-from repro.core.sampling import participation_mask
-from repro.core.server_opt import ServerState, init_server_state, server_update
-from repro.models import params as pdefs
-from repro.sharding.rules import ParallelContext
-
-
-# ===========================================================================
-# Simulation path (paper-faithful, single device)
-# ===========================================================================
-
-
-class SimState(NamedTuple):
-    params: object            # pytree
-    opt: ServerState          # over flat vector
-    errors: jax.Array         # (m, d) per-client EF errors
-    server_error: jax.Array   # (d,) server-side EF error (two-way mode)
-    x_client: jax.Array       # (d,) model as clients see it (two-way mode)
-    # Host-side Python ints, exact at any scale: fp32 accumulation is only
-    # exact below 2^24, which a single dense round at d=11.2M blows through
-    # (n·32·d ≈ 3.6e8 bits), silently freezing cumulative-bits plots — and
-    # keeping them off-device means the round needs no device→host sync.
-    bits: int                 # cumulative one-way communicated bits
-    round: int
-
-
-class _CoreState(NamedTuple):
-    """The device-resident slice of :class:`SimState` — the jit/scan carry.
-
-    ``bits``/``round`` stay host-side (see SimState); everything here is
-    donated to the round executable (``donate_argnums``) so the (m, d)
-    error-feedback buffer and the optimizer state update in place instead
-    of being copied every round."""
-    params: object
-    opt: ServerState
-    errors: jax.Array
-    server_error: jax.Array
-    x_client: jax.Array
-
-
-class FedSim:
-    """Federated simulation over an arbitrary ``loss_fn(params, batch)``.
-
-    With ``fed.wire=True`` every client delta is serialized to packed bytes
-    (repro.comm.wire), timed through a simulated network
-    (repro.comm.transport — pass ``network`` to customize links), and
-    decoded server-side; error feedback tracks the decoded value, so the
-    simulation is exact w.r.t. what the wire actually carried. Round
-    metrics then include measured ``wire_bytes`` and simulated
-    ``round_time_s`` next to the analytic ``bits``.
-    """
-
-    def __init__(self, loss_fn: Callable, fed: FedConfig,
-                 compressor: Optional[Compressor] = None,
-                 network: Optional[object] = None):
-        self.loss_fn = loss_fn
-        self.fed = fed
-        if compressor is None and fed.algorithm == "fedcams":
-            compressor = make_compressor(fed.compressor, fed.compress_ratio,
-                                         fed.wire_block)
-        self.comp = compressor if fed.algorithm == "fedcams" else None
-        n_round = fed.participating or fed.num_clients
-        if fed.client_chunk and 0 < fed.client_chunk < n_round \
-                and n_round % fed.client_chunk:
-            raise ValueError(
-                f"client_chunk={fed.client_chunk} must divide the "
-                f"per-round client count n={n_round} — a silent fallback "
-                f"to the full (n, d) vmap would defeat the memory bound")
-        self._round_fn = None
-        self._scan_fn = None
-        self.codec = None
-        self.network = None
-        if network is not None and not fed.wire:
-            raise ValueError(
-                "a network was supplied but fed.wire is False — the "
-                "transport simulation only runs in wire mode; set "
-                "FedConfig(wire=True)")
-        if fed.wire:
-            from repro.comm import (CommLog, NetworkConfig, SimulatedNetwork,
-                                    make_dense32_codec, make_wire_codec)
-            name = fed.compressor if self.comp is not None else "dense32"
-            self.codec = make_wire_codec(name, fed.compress_ratio,
-                                         fed.wire_block, fed.wire_value_dtype,
-                                         fed.wire_pack_impl)
-            self._down_codec = (self.codec if fed.two_way
-                                else make_dense32_codec())
-            self.network = network or SimulatedNetwork(
-                NetworkConfig(), fed.num_clients)
-            self.comm_log = CommLog()
-
-    def init(self, params) -> SimState:
-        flat, self.unravel = ravel_pytree(params)
-        d = flat.size
-        self._d = d
-        m = self.fed.num_clients
-        # copy the caller's params ONCE: the first round donates the state's
-        # buffers, and consuming arrays the caller still owns would poison
-        # any later use of their init pytree
-        params = jax.tree.map(jnp.array, params)
-        return SimState(
-            params=params,
-            opt=init_server_state(flat),
-            errors=jnp.zeros((m, d), jnp.float32),
-            server_error=jnp.zeros((d,), jnp.float32),
-            x_client=flat,
-            bits=0,
-            round=0,
-        )
-
-    def _bits_per_round(self, n: int) -> int:
-        """Analytic one-way bits for one round (exact host-side int)."""
-        if self.comp is not None:
-            return n * int(self.comp.bits_per_message(self._d))
-        return n * 32 * self._d
-
-    def _transport_met(self, idx_host, round_idx: int) -> dict:
-        """Simulated-network timing for one round (host-side numpy)."""
-        up = self.codec.nbytes(self._d)
-        down = self._down_codec.nbytes(self._d)
-        timing = self.network.round(idx_host, up, down, round_idx)
-        return self.comm_log.record(timing)
-
-    # -- one round ---------------------------------------------------------
-    def round(self, state: SimState, client_batches, client_idx, rng):
-        """client_batches: pytree with leading (n, K, ...); client_idx: (n,).
-
-        The input state's device buffers are DONATED to the round
-        executable (the (m, d) EF error buffer updates in place) — keep
-        only the returned state."""
-        if self._round_fn is None:
-            self._round_fn = jax.jit(self._round_impl, donate_argnums=(0,))
-        new_core, met = self._round_fn(_CoreState(*state[:5]), client_batches,
-                                       client_idx, rng)
-        bits = state.bits + self._bits_per_round(client_idx.shape[0])
-        met = dict(met)
-        met["bits"] = bits
-        if self.network is not None:
-            # transport runs between jitted rounds: byte counts are static
-            # per codec, the timing draw is host-side numpy; the round
-            # index is the host counter (no device sync)
-            met.update(self._transport_met(np.asarray(client_idx),
-                                           state.round))
-        return SimState(*new_core, bits=bits, round=state.round + 1), met
-
-    # -- many rounds, one device program ------------------------------------
-    def run_rounds(self, state: SimState, client_batches, client_idx, rngs):
-        """Scan-driven multi-round execution: R rounds in one jitted
-        ``lax.scan`` with donated carry — one dispatch and one host sync
-        total, instead of R of each.
-
-        ``client_batches``: pytree with leading (R, n, K, ...);
-        ``client_idx``: (R, n); ``rngs``: PRNG keys with leading R.
-        Returns ``(new_state, mets)`` with the same per-round metric dicts
-        the :meth:`round` loop produces, bit-identical."""
-        R, n = int(client_idx.shape[0]), int(client_idx.shape[1])
-        if self._scan_fn is None:
-            def scan_rounds(core, batches, idx, keys):
-                def body(c, inp):
-                    b, i, k = inp
-                    return self._round_impl(c, b, i, k)
-                return lax.scan(body, core, (batches, idx, keys))
-            self._scan_fn = jax.jit(scan_rounds, donate_argnums=(0,))
-        idx_host = np.asarray(client_idx)
-        new_core, stacked = self._scan_fn(_CoreState(*state[:5]),
-                                          client_batches, client_idx, rngs)
-        stacked = jax.device_get(stacked)  # the single host sync
-        bpr = self._bits_per_round(n)
-        mets = []
-        for r in range(R):
-            met = {k: v[r] for k, v in stacked.items()}
-            met["bits"] = state.bits + bpr * (r + 1)
-            if self.network is not None:
-                met.update(self._transport_met(idx_host[r], state.round + r))
-            mets.append(met)
-        new_state = SimState(*new_core, bits=state.bits + bpr * R,
-                             round=state.round + R)
-        return new_state, mets
-
-    def _local_train(self, params, batches):
-        """K local SGD steps for ONE client. batches: (K, ...)."""
-        eta_l = self.fed.eta_l
-
-        def step(p, b):
-            (l, _), g = jax.value_and_grad(self.loss_fn, has_aux=True)(p, b)
-            p = jax.tree.map(lambda x, gg: x - eta_l * gg, p, g)
-            return p, l
-
-        # unrolled (capped): K is static, and unrolling lets XLA fuse
-        # across local steps instead of paying while-loop overhead — same
-        # ops in the same order, numerics unchanged. The cap bounds program
-        # size for large-K configs (the body is also nested inside the
-        # run_rounds round scan).
-        k = jax.tree.leaves(batches)[0].shape[0]
-        local, losses = lax.scan(step, params, batches, unroll=min(k, 8))
-        return local, jnp.mean(losses)
-
-    def _clients_block(self, start, flat0, batches, errs, pos, rng):
-        """Local training + compression for a block of clients.
-
-        ``batches``: (c, K, ...) pytree; ``errs``: (c, d) EF errors (ignored
-        when no compressor); ``pos``: (c,) global positions in the round
-        (the per-client RNG stream). Returns (hats, new_errs, delta,
-        losses)."""
-        d = flat0.size
-        local, losses = jax.vmap(lambda b: self._local_train(start, b))(batches)
-        delta = jax.vmap(lambda p: ravel_pytree(p)[0])(local) - flat0[None, :]
-        if self.comp is not None:
-            if self.codec is not None:
-                # wire mode: the delta really goes through encode->decode;
-                # EF tracks the *decoded* value, so narrowed wire value
-                # dtypes stay exact in the error-feedback sense
-                def one(dd, ee, i):
-                    tot = dd + ee
-                    hat = self.codec.decode(self.codec.encode(tot), d)
-                    return hat, tot - hat
-            else:
-                def one(dd, ee, i):
-                    return ef_compress(self.comp, dd, ee,
-                                       jax.random.fold_in(rng, i))
-            hats, new_errs = jax.vmap(one)(delta, errs, pos)
-        else:
-            if self.codec is not None:  # uncompressed algo, dense32 wire
-                hats = jax.vmap(
-                    lambda t: self.codec.decode(self.codec.encode(t), d)
-                )(delta)
-            else:
-                hats = delta
-            new_errs = errs
-        return hats, new_errs, delta, losses
-
-    def _round_impl(self, core: _CoreState, client_batches, client_idx, rng):
-        fed = self.fed
-        n = client_idx.shape[0]
-        start = self.unravel(core.x_client)  # what clients see (== params
-        # unless two-way compression is on)
-        flat0 = core.x_client
-        d = flat0.size
-        pos = jnp.arange(n)
-
-        cc = fed.client_chunk
-        if cc and 0 < cc < n and n % cc:  # trace-time n may differ from
-            # the configured count __init__ validated against
-            raise ValueError(
-                f"client_chunk={cc} does not divide this round's client "
-                f"count n={n} — refusing to silently fall back to the "
-                f"full (n, d) vmap")
-        if cc and 0 < cc < n:
-            # client_chunk mode: scan the per-client train/compress/encode
-            # pipeline over n/cc chunks, gathering/scattering each chunk's
-            # EF slice inside the body and accumulating sums — peak
-            # delta/hat/error working memory is (cc, d) instead of (n, d)
-            shape_c = lambda x: x.reshape((n // cc, cc) + x.shape[1:])
-
-            def body(carry, inp):
-                b_c, i_c, p_c = inp
-                errors, s_hat, s_tot, s_delta, s_loss = carry
-                e_c = (errors[i_c] if self.comp is not None
-                       else jnp.zeros((cc, 0), jnp.float32))
-                hats, nerrs, delta, losses = self._clients_block(
-                    start, flat0, b_c, e_c, p_c, rng)
-                s_hat = s_hat + jnp.sum(hats, axis=0)
-                s_delta = s_delta + jnp.sum(delta, axis=0)
-                s_loss = s_loss + jnp.sum(losses)
-                if self.comp is not None:
-                    s_tot = s_tot + jnp.sum(delta + e_c, axis=0)
-                    errors = errors.at[i_c].set(nerrs)
-                return (errors, s_hat, s_tot, s_delta, s_loss), None
-
-            carry0 = (core.errors, jnp.zeros(d),
-                      jnp.zeros(d if self.comp is not None else 0),
-                      jnp.zeros(d), jnp.zeros(()))
-            (errors, s_hat, s_tot, s_delta, s_loss), _ = lax.scan(
-                body, carry0,
-                (jax.tree.map(shape_c, client_batches),
-                 shape_c(client_idx), shape_c(pos)))
-            hats_mean, loss = s_hat / n, s_loss / n
-            mean_tot, mean_delta = s_tot / n, s_delta / n
-        else:
-            errs = (core.errors[client_idx] if self.comp is not None
-                    else jnp.zeros((n, 0), jnp.float32))
-            hats, new_errs, delta, losses = self._clients_block(
-                start, flat0, client_batches, errs, pos, rng)
-            hats_mean, loss = jnp.mean(hats, axis=0), jnp.mean(losses)
-            if self.comp is not None:
-                mean_tot = jnp.mean(delta + errs, axis=0)
-                errors = core.errors.at[client_idx].set(new_errs)
-            else:
-                errors = core.errors
-            mean_delta = jnp.mean(delta, axis=0)
-
-        gamma = jnp.zeros(())
-        agg = hats_mean
-        if self.comp is not None:
-            # Assumption 4.17 diagnostic (paper Fig. 6):
-            #   gamma = ||C(mean(Δ+e)) − mean(C(Δ+e))|| / ||mean(Δ)||
-            c_of_mean = self.comp.compress(mean_tot,
-                                           jax.random.fold_in(rng, 999983))
-            gamma = (jnp.linalg.norm(c_of_mean - agg)
-                     / jnp.maximum(jnp.linalg.norm(mean_delta), 1e-12))
-
-        # server update on the flat vector
-        xflat, _ = ravel_pytree(core.params)
-        new_flat, opt = server_update(fed, core.opt, xflat, agg)
-
-        # beyond-paper: two-way (server->client) EF compression, appendix D
-        if fed.two_way and self.comp is not None:
-            upd = new_flat - core.x_client
-            tot = upd + core.server_error
-            if self.codec is not None:  # downlink exercises the codec too
-                hat = self.codec.decode(self.codec.encode(tot), d)
-            else:
-                hat = self.comp.compress(tot, jax.random.fold_in(rng, 10**6))
-            server_error = tot - hat
-            x_client = core.x_client + hat
-        else:
-            server_error = core.server_error
-            x_client = new_flat
-
-        new_params = self.unravel(new_flat)
-        new_core = _CoreState(new_params, opt, errors, server_error, x_client)
-        return new_core, {"loss": loss, "gamma": gamma}
-
-
-# ===========================================================================
-# Mesh path (production)
-# ===========================================================================
-
-
-class FedMeshState(NamedTuple):
-    params: object     # pytree, TP-sharded
-    m: object          # server momentum    (fp32, like params)
-    v: object          # server variance
-    vhat: object       # max-stabilized variance
-    errors: object     # per-client EF errors: leading client dim
-    round: jax.Array
-
-
-def client_batch_axes(fed: FedConfig) -> Tuple[str, ...]:
-    """Mesh axes the global batch is sharded over."""
-    axes = tuple(fed.client_axes)
-    if "data" not in axes:
-        axes = axes + ("data",)
-    return axes
-
-
-def state_shard_axes(fed: FedConfig):
-    """Mesh axes the server state shards over (ZeRO mode)."""
-    return tuple(fed.client_axes) if fed.client_axes else ("data",)
-
-
-def state_shard_dim(dref: pdefs.ParamDef, shards: int):
-    """First dim of a leaf that can host the server-state shard, or None."""
-    if shards <= 1:
-        return None
-    for i, (size, sp) in enumerate(zip(dref.shape, dref.spec)):
-        if sp is None and size % shards == 0 and size >= shards:
-            return i
-    return None
-
-
-def fed_state_defs(model, fed: FedConfig):
-    """ParamDef tree for the full federated state (GLOBAL shapes)."""
-    par = model.defs()
-
-    def fp32(dref: pdefs.ParamDef) -> pdefs.ParamDef:
-        import dataclasses
-        return dataclasses.replace(dref, dtype="float32")
-
-    def opt_leaf(dref: pdefs.ParamDef) -> pdefs.ParamDef:
-        import dataclasses
-        dref = fp32(dref)
-        if fed.shard_server_state:
-            sd = state_shard_dim(dref, fed.state_shards)
-            if sd is not None:
-                axes = state_shard_axes(fed)
-                spec = list(dref.spec)
-                spec[sd] = axes[0] if len(axes) == 1 else tuple(axes)
-                dref = dataclasses.replace(dref, spec=P(*spec))
-        return dref
-
-    def client_stacked(dref: pdefs.ParamDef) -> pdefs.ParamDef:
-        import dataclasses
-        if not fed.client_axes:
-            ax = None
-        elif len(fed.client_axes) == 1:
-            ax = fed.client_axes[0]
-        else:
-            ax = tuple(fed.client_axes)
-        return dataclasses.replace(
-            dref, shape=(fed.num_clients,) + tuple(dref.shape),
-            spec=P(ax, *dref.spec), dtype="float32")
-
-    opt = jax.tree.map(opt_leaf, par, is_leaf=pdefs.is_def)
-    errors = jax.tree.map(client_stacked, par, is_leaf=pdefs.is_def)
-    return FedMeshState(
-        params=par, m=opt, v=opt, vhat=opt, errors=errors,
-        round=pdefs.ParamDef((), P(), dtype="int32", init="zeros"))
-
-
-def init_fed_state(model, fed: FedConfig, rng) -> FedMeshState:
-    defs = fed_state_defs(model, fed)
-    params = pdefs.init_params(defs.params, rng)
-    zeros = lambda t: jax.tree.map(
-        lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), t, is_leaf=pdefs.is_def)
-    return FedMeshState(params=params, m=zeros(defs.m), v=zeros(defs.v),
-                        vhat=zeros(defs.vhat), errors=zeros(defs.errors),
-                        round=jnp.zeros((), jnp.int32))
-
-
-# -- aggregation strategies --------------------------------------------------
-
-
-def _agg_dense(hat_tree, my_mask, n_eff, ctx: ParallelContext,
-               wire_dtype: str = "float32"):
-    """Paper-faithful: dense psum over the client axes. ``wire_dtype``
-    narrows the collective payload (bf16 halves client-axis bytes; the
-    caller keeps error feedback exact by tracking the narrowed value)."""
-    wd = jnp.dtype(wire_dtype)
-    contrib = jax.tree.map(
-        lambda h: jnp.where(my_mask > 0, h, 0.0).astype(wd), hat_tree)
-    return jax.tree.map(
-        lambda c: ctx.psum_clients(c).astype(jnp.float32) / n_eff, contrib)
-
-
-def _sparse_topk_leaf(tot, ratio, my_mask, n_eff, ctx: ParallelContext,
-                      block: int = 2048):
-    """Beyond-paper: all_gather (values, indices) of the local blockwise
-    top-k and scatter-add — the wire carries ~2k words instead of d, and the
-    selection is bit-identical to the dense blocktopk path (same
-    ``block_layout``). Returns (aggregated dense leaf, this client's dense
-    hat for error feedback)."""
-    from repro.core.compressors import block_layout
-    flat = tot.reshape(-1)
-    d = flat.size
-    bs, nb = block_layout(d, block)
-    pad = nb * bs - d
-    xb = jnp.pad(flat, (0, pad)).reshape(nb, bs)
-    k = max(1, int(round(ratio * bs)))
-    _, idx = lax.top_k(jnp.abs(xb), k)                       # (nb, k)
-    vals = jnp.take_along_axis(xb, idx, axis=1)
-    gidx = (idx + (jnp.arange(nb) * bs)[:, None]).reshape(-1)
-    kept = vals.reshape(-1)
-    hat = jnp.zeros(nb * bs, flat.dtype).at[gidx].set(kept)[:d]
-    masked = kept * (my_mask > 0)
-    g_vals = ctx.all_gather_clients(masked[None], axis=0).reshape(-1)
-    g_idx = ctx.all_gather_clients(gidx[None], axis=0).reshape(-1)
-    # NB: fresh zeros (replicated vma) — zeros_like(varying) would taint the
-    # aggregate as client-varying.
-    zeros = jnp.zeros(nb * bs, flat.dtype)
-    agg = (zeros.at[g_idx].add(g_vals) / n_eff)[:d]
-    return agg.reshape(tot.shape), hat.reshape(tot.shape)
-
-
-def _packed_sign_leaf(tot, my_mask, n_eff, ctx: ParallelContext):
-    """Beyond-paper: scaled-sign with the sign bits packed 8->1 in uint8 for
-    the client-axis all_gather (1 bit/coordinate on the wire)."""
-    flat = tot.reshape(-1)
-    d = flat.size
-    scale = jnp.mean(jnp.abs(flat)) * (my_mask > 0)
-    bits = jnp.packbits((flat >= 0).astype(jnp.uint8))
-    g_bits = ctx.all_gather_clients(bits[None], axis=0)      # (m, d/8)
-    g_scale = ctx.all_gather_clients(scale[None], axis=0)    # (m,)
-    signs = jnp.unpackbits(g_bits, axis=1)[:, :d].astype(jnp.float32) * 2.0 - 1.0
-    agg = (g_scale[:, None] * signs).sum(0) / n_eff
-    # sign(0) := +1 to match the packed bits (error feedback must track the
-    # value the wire actually carried)
-    hat = jnp.mean(jnp.abs(flat)) * jnp.where(flat >= 0, 1.0, -1.0)
-    return agg.reshape(tot.shape), hat.reshape(tot.shape)
-
-
-def _sharded_server_update(fed: FedConfig, st: ServerState, params, agg,
-                           model, ctx: ParallelContext):
-    """ZeRO-style server step: each index along the state-shard axes owns a
-    slice of (m, v, v̂); it updates its slice of x from its slice of the
-    aggregate and the refreshed params are all-gathered back (invariant vma).
-    Leaves too small to shard stay replicated and update normally."""
-    axes = state_shard_axes(fed)
-    shards = fed.state_shards
-    # linear index along the shard axes
-    idx = 0
-    for ax in axes:
-        idx = idx * lax.psum(1, ax) + lax.axis_index(ax)
-
-    defs = model.defs()
-    dims = jax.tree.map(lambda d: state_shard_dim(d, shards), defs,
-                        is_leaf=pdefs.is_def)
-
-    def take(leaf, sd):
-        if sd is None:
-            return leaf
-        chunk = leaf.shape[sd] // shards
-        return lax.dynamic_slice_in_dim(leaf, idx * chunk, chunk, axis=sd)
-
-    p_sh = jax.tree.map(take, params, dims)
-    agg_sh = jax.tree.map(take, agg, dims)
-    st_sh = ServerState(m=st.m, v=st.v, vhat=st.vhat, t=st.t)  # already shards
-    newp_sh, new_st = server_update(fed, st_sh, p_sh, agg_sh)
-
-    def gather(newp, oldp, sd):
-        if sd is None:
-            return newp
-        from repro.sharding.rules import ParallelContext as _PC
-        x = newp
-        for ax in axes:
-            try:
-                from jax._src.lax.parallel import all_gather_invariant
-                x = all_gather_invariant(x, ax, axis=sd, tiled=True)
-            except ImportError:  # pragma: no cover
-                x = lax.all_gather(x, ax, axis=sd, tiled=True)
-        return x.astype(oldp.dtype)
-
-    new_params = jax.tree.map(gather, newp_sh, params, dims)
-    return new_params, new_st
-
-
-# -- the round ---------------------------------------------------------------
-
-
-def mesh_wire_bytes(fed: FedConfig, delta_tree, block: int = 2048,
-                    tp: int = 1) -> int:
-    """Measured per-client contribution bytes for one mesh round's
-    client-axis collective, sized to what the aggregation paths *actually*
-    move per leaf: ``_sparse_topk_leaf`` gathers uint32 global indices +
-    fp32 values for the kept coordinates (8 bytes each), ``_packed_sign_leaf``
-    gathers the 8→1 packed sign bits + one fp32 scale, and the dense psum
-    carries ``delta_dtype`` words. (Collectives carry no per-message header,
-    unlike the comm.wire point-to-point codecs.)
-
-    ``delta_tree`` holds this device's *local* shards; every one of the
-    client's ``tp`` model-parallel devices pushes its own payload into the
-    client-axis collective (model-replicated leaves included — each device
-    sends its copy), so the client's wire traffic is the local total × tp.
-    """
-    from repro.core.compressors import block_layout
-    sparse = fed.algorithm == "fedcams" and fed.aggregation == "sparse"
-    total = 0
-    for leaf in jax.tree.leaves(delta_tree):
-        dl = int(np.prod(leaf.shape))
-        if sparse and fed.compressor in ("topk", "blocktopk"):
-            bs, nb = block_layout(dl, block)
-            kb = max(1, int(round(fed.compress_ratio * bs)))
-            total += nb * kb * 8          # uint32 index + fp32 value
-        elif sparse and fed.compressor == "packedsign":
-            total += (dl + 7) // 8 + 4    # 1 bit/coord + fp32 scale
-        else:
-            total += dl * jnp.dtype(fed.delta_dtype).itemsize
-    return total * max(tp, 1)
-
-
-def build_fed_round(model, fed: FedConfig, train: TrainConfig,
-                    ctx: ParallelContext, *, chunk: int = 2048,
-                    kernel_impl: Optional[object] = None):
-    """Returns fed_round(state, batch, seed) — the per-device SPMD function
-    (wrap in shard_map + jit via launch.train / launch.dryrun)."""
-    # On the mesh, deltas are per-leaf shards (billions of elements for the
-    # large archs): global top-k is ill-defined and lax.top_k overflows int32
-    # indices, so "topk" means the blockwise TPU kernel semantics here
-    # (DESIGN.md §3; contraction bound unchanged). Exact global top-k lives
-    # in the FedSim simulation path.
-    comp_name = "blocktopk" if fed.compressor == "topk" else fed.compressor
-    comp = (make_compressor(comp_name, fed.compress_ratio)
-            if fed.algorithm == "fedcams" else None)
-    m_clients = fed.num_clients
-    n_part = fed.participating or m_clients
-    hierarchical = "data" not in fed.client_axes  # within-client DP on "data"
-
-    def local_loss(p, b):
-        return model.loss(p, b, ctx, remat_policy=train.remat_policy,
-                          chunk=chunk)
-
-    # TP gradient correctness relies on shard_map's varying-manual-axes
-    # tracking (check_vma=True at every launch-site shard_map): jax then
-    # transposes the forward psums correctly, so gradients of both sharded
-    # and replicated parameters are exact — verified against the tp=1 model
-    # in tests/test_sharding.py.
-
-    def fed_round(state: FedMeshState, batch, seed):
-        params = state.params
-
-        # Clients must diverge during local training: mark the replicated
-        # global params as VARYING over the client axes (lax.pvary — a
-        # vma-type cast, no communication) so shard_map's vma autodiff does
-        # NOT sum gradients across clients. In hierarchical mode the "data"
-        # axis stays replicated, so the automatic gradient psum over "data"
-        # implements within-client data parallelism (we rescale sum->mean).
-        def _pvary(t):
-            if not fed.client_axes:
-                return t
-            return jax.tree.map(
-                lambda x: compat.pvary(x, tuple(fed.client_axes)), t)
-
-        local0 = _pvary(params)
-
-        def step(p, b):
-            (l, _), g = jax.value_and_grad(local_loss, has_aux=True)(p, b)
-            if hierarchical:
-                g = jax.tree.map(lambda x: x / ctx.dp, g)
-            p = jax.tree.map(lambda x, gg: x - fed.eta_l * gg.astype(x.dtype),
-                             p, g)
-            return p, l
-
-        local, losses = lax.scan(step, local0, batch)
-        delta = jax.tree.map(lambda a, b_: (a - b_).astype(jnp.float32),
-                             local, local0)
-
-        # participation (shared randomness -> identical mask on every device)
-        rng = jax.random.fold_in(jax.random.PRNGKey(0), seed)
-        mask = participation_mask(jax.random.fold_in(rng, 1), m_clients, n_part)
-        my_mask = mask[ctx.client_index()]
-        n_eff = float(n_part)
-
-        my_err = jax.tree.map(lambda e: e[0], state.errors)  # local client slice
-        if comp is not None:
-            if fed.aggregation == "sparse" and fed.compressor in ("topk", "blocktopk"):
-                tot = jax.tree.map(lambda dd, ee: dd + ee, delta, my_err)
-                pairs = jax.tree.map(
-                    lambda t: _sparse_topk_leaf(t, fed.compress_ratio, my_mask,
-                                                n_eff, ctx), tot)
-                agg = jax.tree.map(lambda pr: pr[0], pairs,
-                                   is_leaf=lambda x: isinstance(x, tuple))
-                hat = jax.tree.map(lambda pr: pr[1], pairs,
-                                   is_leaf=lambda x: isinstance(x, tuple))
-                new_err = jax.tree.map(
-                    lambda t, h, eo: jnp.where(my_mask > 0, t - h, eo),
-                    tot, hat, my_err)
-            elif fed.aggregation == "sparse" and fed.compressor == "packedsign":
-                tot = jax.tree.map(lambda dd, ee: dd + ee, delta, my_err)
-                pairs = jax.tree.map(
-                    lambda t: _packed_sign_leaf(t, my_mask, n_eff, ctx), tot)
-                agg = jax.tree.map(lambda pr: pr[0], pairs,
-                                   is_leaf=lambda x: isinstance(x, tuple))
-                hat = jax.tree.map(lambda pr: pr[1], pairs,
-                                   is_leaf=lambda x: isinstance(x, tuple))
-                new_err = jax.tree.map(
-                    lambda t, h, eo: jnp.where(my_mask > 0, t - h, eo),
-                    tot, hat, my_err)
-            else:
-                if kernel_impl is not None:
-                    hat, new_err = kernel_impl.ef_compress_tree(
-                        comp, delta, my_err, my_mask)
-                else:
-                    hat, new_err = ef_compress_masked(
-                        comp, delta, my_err, my_mask,
-                        jax.random.fold_in(rng, 2))
-                if fed.delta_dtype != "float32":
-                    # error feedback must track the value actually sent
-                    wd = jnp.dtype(fed.delta_dtype)
-                    hat_tx = jax.tree.map(
-                        lambda h: h.astype(wd).astype(jnp.float32), hat)
-                    new_err = jax.tree.map(
-                        lambda d, e, h: jnp.where(my_mask > 0, d + e - h, e),
-                        delta, my_err, hat_tx)
-                    hat = hat_tx
-                agg = _agg_dense(hat, my_mask, n_eff, ctx, fed.delta_dtype)
-        else:
-            new_err = my_err
-            agg = _agg_dense(delta, my_mask, n_eff, ctx, fed.delta_dtype)
-
-        # server update (replicated elementwise math on sharded leaves)
-        st = ServerState(m=state.m, v=state.v, vhat=state.vhat, t=state.round)
-        if kernel_impl is not None and fed.algorithm in ("fedams", "fedcams"):
-            new_params, new_st = kernel_impl.fedams_update_tree(fed, st, params, agg)
-        elif fed.shard_server_state and fed.state_shards > 1:
-            new_params, new_st = _sharded_server_update(fed, st, params, agg,
-                                                        model, ctx)
-        else:
-            new_params, new_st = server_update(fed, st, params, agg)
-
-        errors = jax.tree.map(lambda e, ne: e.at[0].set(ne),
-                              state.errors, new_err)
-        loss = ctx.pmean_clients(jnp.mean(losses))
-        if hierarchical:
-            loss = ctx.pmean_data(loss)
-        new_state = FedMeshState(params=new_params, m=new_st.m, v=new_st.v,
-                                 vhat=new_st.vhat, errors=errors,
-                                 round=new_st.t)
-        # measured uplink bytes this round (trace-time constant, replicated);
-        # same key/semantics as FedSim wire mode's per-round uplink metric.
-        # All m client-axis devices feed the collective — non-participants
-        # contribute masked zeros that still occupy wire — so the factor is
-        # m, not n_part.
-        wire = jnp.float32(
-            m_clients * mesh_wire_bytes(fed, delta, tp=ctx.tp))
-        return new_state, {"loss": loss, "wire_up_bytes": wire}
-
-    return fed_round
-
-
-def build_fed_rounds_scan(fed_round):
-    """Lift a per-round mesh body to the scan-driven multi-round body:
-    ``(state, batches[R], seeds[R]) -> (state, stacked metrics)``. Shared by
-    core.api.FederatedTrainer and launch.train so the scan step exists in
-    exactly one place (wrap in shard_map + jit with ``donate_argnums=(0,)``
-    at the call site)."""
-
-    def rounds_fn(state, batches, seeds):
-        def body(st, inp):
-            b, s = inp
-            return fed_round(st, b, s)
-        return lax.scan(body, state, (batches, seeds))
-
-    return rounds_fn
-
-
-def scan_batch_specs(batch_specs):
-    """Per-round batch PartitionSpecs -> stacked (R, ...) specs."""
-    return jax.tree.map(lambda s: P(None, *tuple(s)), batch_specs)
-
-
-def stage_mesh_rounds(lm_data, r0: int, count: int, local_steps: int,
-                      global_batch: int, seq_len: int):
-    """Host-side staging for ``count`` mesh rounds: stacked (R, ...) batch
-    dict + (R,) int32 seeds for :func:`build_fed_rounds_scan` (shared by
-    core.api and launch.train)."""
-    raws = [lm_data.mesh_batch(r, local_steps, global_batch, seq_len)
-            for r in range(r0, r0 + count)]
-    batch = {k: jnp.asarray(np.stack([b[k] for b in raws]))
-             for k in raws[0]}
-    return batch, jnp.arange(r0, r0 + count, dtype=jnp.int32)
-
-
-def fed_batch_defs(model, fed: FedConfig, train: TrainConfig):
-    """GLOBAL batch defs with client-axis sharding, leading K dim."""
-    b = model.train_batch_defs(train.global_batch, train.seq_len)
-    axes = client_batch_axes(fed)
-    ax = axes[0] if len(axes) == 1 else tuple(axes)
-
-    def stack_k(d: pdefs.ParamDef):
-        import dataclasses
-        spec = list(d.spec)
-        spec[0] = ax  # batch dim over client (+data) axes
-        return dataclasses.replace(
-            d, shape=(fed.local_steps,) + tuple(d.shape), spec=P(None, *spec))
-
-    return jax.tree.map(stack_k, b, is_leaf=pdefs.is_def)
+from repro.core.local import (LocalUpdate, hetero_step_counts,  # noqa: F401
+                              local_lr, make_local_update, run_local_steps)
+from repro.core.mesh import (FedMeshState, _sharded_server_update,  # noqa: F401
+                             build_fed_round, build_fed_rounds_scan,
+                             client_batch_axes, fed_batch_defs,
+                             fed_state_defs, init_fed_state, mesh_wire_bytes,
+                             scan_batch_specs, stage_mesh_rounds,
+                             state_shard_axes, state_shard_dim)
+from repro.core.sim import FedSim, SimState, _CoreState  # noqa: F401
+from repro.core.stages import (agg_dense, client_uplink,  # noqa: F401
+                               gamma_diagnostic, mesh_uplink,
+                               packed_sign_leaf, server_downlink,
+                               sparse_topk_leaf)
+
+# pre-split private aliases, kept for callers that reached into the monolith
+_agg_dense = agg_dense
+_sparse_topk_leaf = sparse_topk_leaf
+_packed_sign_leaf = packed_sign_leaf

@@ -1,0 +1,322 @@
+"""The paper-faithful simulation backend (DESIGN.md §1).
+
+``FedSim`` runs the paper's Algorithms 1 & 2 as pure-array simulation:
+m clients (default 100), vmapped local updates (core/local.py rules),
+*global-vector* compression exactly as the paper evaluates it. Runs on one
+CPU device; powers the paper-faithful benchmarks and examples. The mesh
+(production SPMD) backend lives in core/mesh.py; both compose the shared
+EF/compress/wire stages from core/stages.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import FedConfig
+from repro.core.compressors import Compressor, make_compressor
+from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
+                              run_local_steps)
+from repro.core.server_opt import init_server_state, server_update
+from repro.core.stages import (client_uplink, gamma_diagnostic,
+                               server_downlink)
+
+
+class SimState(NamedTuple):
+    params: object            # pytree
+    opt: object               # ServerState over flat vector
+    errors: jax.Array         # (m, d) per-client EF errors
+    server_error: jax.Array   # (d,) server-side EF error (two-way mode)
+    x_client: jax.Array       # (d,) model as clients see it (two-way mode)
+    # Host-side Python ints, exact at any scale: fp32 accumulation is only
+    # exact below 2^24, which a single dense round at d=11.2M blows through
+    # (n·32·d ≈ 3.6e8 bits), silently freezing cumulative-bits plots — and
+    # keeping them off-device means the round needs no device→host sync.
+    bits: int                 # cumulative one-way communicated bits
+    round: int
+
+
+class _CoreState(NamedTuple):
+    """The device-resident slice of :class:`SimState` — the jit/scan carry.
+
+    ``bits``/``round`` stay host-side (see SimState); everything here is
+    donated to the round executable (``donate_argnums``) so the (m, d)
+    error-feedback buffer and the optimizer state update in place instead
+    of being copied every round."""
+    params: object
+    opt: object
+    errors: jax.Array
+    server_error: jax.Array
+    x_client: jax.Array
+
+
+class FedSim:
+    """Federated simulation over an arbitrary ``loss_fn(params, batch)``.
+
+    The local phase runs the configured :class:`~repro.core.local.LocalUpdate`
+    rule (``fed.local_opt``: plain SGD, heavy-ball momentum, or proximal
+    SGD) under the per-round LR schedule (``fed.eta_l_decay``) and
+    heterogeneous per-client step counts (``fed.local_steps_min``).
+
+    With ``fed.wire=True`` every client delta is serialized to packed bytes
+    (repro.comm.wire), timed through a simulated network
+    (repro.comm.transport — pass ``network`` to customize links), and
+    decoded server-side; error feedback tracks the decoded value, so the
+    simulation is exact w.r.t. what the wire actually carried. Round
+    metrics then include measured ``wire_bytes`` and simulated
+    ``round_time_s`` next to the analytic ``bits``.
+    """
+
+    def __init__(self, loss_fn: Callable, fed: FedConfig,
+                 compressor: Optional[Compressor] = None,
+                 network: Optional[object] = None):
+        self.loss_fn = loss_fn
+        self.fed = fed
+        self.rule = make_local_update(fed)
+        if compressor is None and fed.algorithm == "fedcams":
+            compressor = make_compressor(fed.compressor, fed.compress_ratio,
+                                         fed.wire_block)
+        self.comp = compressor if fed.algorithm == "fedcams" else None
+        n_round = fed.participating or fed.num_clients
+        if fed.client_chunk and 0 < fed.client_chunk < n_round \
+                and n_round % fed.client_chunk:
+            raise ValueError(
+                f"client_chunk={fed.client_chunk} must divide the "
+                f"per-round client count n={n_round} — a silent fallback "
+                f"to the full (n, d) vmap would defeat the memory bound")
+        self._round_fn = None
+        self._scan_fn = None
+        self.codec = None
+        self.network = None
+        if network is not None and not fed.wire:
+            raise ValueError(
+                "a network was supplied but fed.wire is False — the "
+                "transport simulation only runs in wire mode; set "
+                "FedConfig(wire=True)")
+        if fed.wire:
+            from repro.comm import (CommLog, NetworkConfig, SimulatedNetwork,
+                                    make_dense32_codec, make_wire_codec)
+            name = fed.compressor if self.comp is not None else "dense32"
+            self.codec = make_wire_codec(name, fed.compress_ratio,
+                                         fed.wire_block, fed.wire_value_dtype,
+                                         fed.wire_pack_impl)
+            self._down_codec = (self.codec if fed.two_way
+                                else make_dense32_codec())
+            self.network = network or SimulatedNetwork(
+                NetworkConfig(), fed.num_clients)
+            self.comm_log = CommLog()
+
+    def init(self, params) -> SimState:
+        flat, self.unravel = ravel_pytree(params)
+        d = flat.size
+        self._d = d
+        m = self.fed.num_clients
+        # copy the caller's params ONCE: the first round donates the state's
+        # buffers, and consuming arrays the caller still owns would poison
+        # any later use of their init pytree
+        params = jax.tree.map(jnp.array, params)
+        return SimState(
+            params=params,
+            opt=init_server_state(flat),
+            errors=jnp.zeros((m, d), jnp.float32),
+            server_error=jnp.zeros((d,), jnp.float32),
+            x_client=flat,
+            bits=0,
+            round=0,
+        )
+
+    def _bits_per_round(self, n: int) -> int:
+        """Analytic one-way bits for one round (exact host-side int)."""
+        if self.comp is not None:
+            return n * int(self.comp.bits_per_message(self._d))
+        return n * 32 * self._d
+
+    def _transport_met(self, idx_host, round_idx: int) -> dict:
+        """Simulated-network timing for one round (host-side numpy)."""
+        up = self.codec.nbytes(self._d)
+        down = self._down_codec.nbytes(self._d)
+        timing = self.network.round(idx_host, up, down, round_idx)
+        return self.comm_log.record(timing)
+
+    # -- one round ---------------------------------------------------------
+    def round(self, state: SimState, client_batches, client_idx, rng):
+        """client_batches: pytree with leading (n, K, ...); client_idx: (n,).
+
+        The input state's device buffers are DONATED to the round
+        executable (the (m, d) EF error buffer updates in place) — keep
+        only the returned state."""
+        if self._round_fn is None:
+            self._round_fn = jax.jit(self._round_impl, donate_argnums=(0,))
+        new_core, met = self._round_fn(_CoreState(*state[:5]), client_batches,
+                                       client_idx, rng,
+                                       jnp.int32(state.round))
+        bits = state.bits + self._bits_per_round(client_idx.shape[0])
+        met = dict(met)
+        met["bits"] = bits
+        if self.network is not None:
+            # transport runs between jitted rounds: byte counts are static
+            # per codec, the timing draw is host-side numpy; the round
+            # index is the host counter (no device sync)
+            met.update(self._transport_met(np.asarray(client_idx),
+                                           state.round))
+        return SimState(*new_core, bits=bits, round=state.round + 1), met
+
+    # -- many rounds, one device program ------------------------------------
+    def run_rounds(self, state: SimState, client_batches, client_idx, rngs):
+        """Scan-driven multi-round execution: R rounds in one jitted
+        ``lax.scan`` with donated carry — one dispatch and one host sync
+        total, instead of R of each.
+
+        ``client_batches``: pytree with leading (R, n, K, ...);
+        ``client_idx``: (R, n); ``rngs``: PRNG keys with leading R.
+        Returns ``(new_state, mets)`` with the same per-round metric dicts
+        the :meth:`round` loop produces, bit-identical."""
+        R, n = int(client_idx.shape[0]), int(client_idx.shape[1])
+        if self._scan_fn is None:
+            def scan_rounds(core, batches, idx, keys, rounds):
+                def body(c, inp):
+                    b, i, k, r = inp
+                    return self._round_impl(c, b, i, k, r)
+                return lax.scan(body, core, (batches, idx, keys, rounds))
+            self._scan_fn = jax.jit(scan_rounds, donate_argnums=(0,))
+        idx_host = np.asarray(client_idx)
+        rounds_dev = state.round + jnp.arange(R, dtype=jnp.int32)
+        new_core, stacked = self._scan_fn(_CoreState(*state[:5]),
+                                          client_batches, client_idx, rngs,
+                                          rounds_dev)
+        stacked = jax.device_get(stacked)  # the single host sync
+        bpr = self._bits_per_round(n)
+        mets = []
+        for r in range(R):
+            met = {k: v[r] for k, v in stacked.items()}
+            met["bits"] = state.bits + bpr * (r + 1)
+            if self.network is not None:
+                met.update(self._transport_met(idx_host[r], state.round + r))
+            mets.append(met)
+        new_state = SimState(*new_core, bits=state.bits + bpr * R,
+                             round=state.round + R)
+        return new_state, mets
+
+    def _local_train(self, params, batches, eta_l, k_i=None):
+        """K local steps of the configured rule for ONE client.
+        batches: (K, ...); ``k_i`` (traced scalar) masks steps past this
+        client's heterogeneous step count."""
+
+        def grad_fn(p, b):
+            (l, _), g = jax.value_and_grad(self.loss_fn, has_aux=True)(p, b)
+            return l, g
+
+        # unrolled (capped): K is static, and unrolling lets XLA fuse
+        # across local steps instead of paying while-loop overhead — same
+        # ops in the same order, numerics unchanged. The cap bounds program
+        # size for large-K configs (the body is also nested inside the
+        # run_rounds round scan).
+        k = jax.tree.leaves(batches)[0].shape[0]
+        return run_local_steps(self.rule, grad_fn, params, batches, eta_l,
+                               k_i=k_i, unroll=min(k, 8))
+
+    def _clients_block(self, start, flat0, batches, errs, pos, rng, eta_l,
+                       k_blk=None):
+        """Local training + uplink compression for a block of clients.
+
+        ``batches``: (c, K, ...) pytree; ``errs``: (c, d) EF errors (ignored
+        when no compressor); ``pos``: (c,) global positions in the round
+        (the per-client RNG stream); ``k_blk``: (c,) heterogeneous step
+        counts or None. Returns (hats, new_errs, delta, losses)."""
+        d = flat0.size
+        if k_blk is None:
+            local, losses = jax.vmap(
+                lambda b: self._local_train(start, b, eta_l))(batches)
+        else:
+            local, losses = jax.vmap(
+                lambda b, ki: self._local_train(start, b, eta_l, ki))(
+                    batches, k_blk)
+        delta = jax.vmap(lambda p: ravel_pytree(p)[0])(local) - flat0[None, :]
+        hats, new_errs = client_uplink(self.comp, self.codec, d, rng,
+                                       delta, errs, pos)
+        return hats, new_errs, delta, losses
+
+    def _round_impl(self, core: _CoreState, client_batches, client_idx, rng,
+                    round_idx):
+        fed = self.fed
+        n = client_idx.shape[0]
+        start = self.unravel(core.x_client)  # what clients see (== params
+        # unless two-way compression is on)
+        flat0 = core.x_client
+        d = flat0.size
+        pos = jnp.arange(n)
+        eta_l = local_lr(fed, round_idx)
+        k_all = hetero_step_counts(fed, rng, n)  # None unless heterogeneous
+
+        cc = fed.client_chunk
+        if cc and 0 < cc < n and n % cc:  # trace-time n may differ from
+            # the configured count __init__ validated against
+            raise ValueError(
+                f"client_chunk={cc} does not divide this round's client "
+                f"count n={n} — refusing to silently fall back to the "
+                f"full (n, d) vmap")
+        if cc and 0 < cc < n:
+            # client_chunk mode: scan the per-client train/compress/encode
+            # pipeline over n/cc chunks, gathering/scattering each chunk's
+            # EF slice inside the body and accumulating sums — peak
+            # delta/hat/error working memory is (cc, d) instead of (n, d)
+            shape_c = lambda x: x.reshape((n // cc, cc) + x.shape[1:])
+
+            def body(carry, inp):
+                b_c, i_c, p_c = inp
+                errors, s_hat, s_tot, s_delta, s_loss = carry
+                e_c = (errors[i_c] if self.comp is not None
+                       else jnp.zeros((cc, 0), jnp.float32))
+                k_c = None if k_all is None else k_all[p_c]
+                hats, nerrs, delta, losses = self._clients_block(
+                    start, flat0, b_c, e_c, p_c, rng, eta_l, k_c)
+                s_hat = s_hat + jnp.sum(hats, axis=0)
+                s_delta = s_delta + jnp.sum(delta, axis=0)
+                s_loss = s_loss + jnp.sum(losses)
+                if self.comp is not None:
+                    s_tot = s_tot + jnp.sum(delta + e_c, axis=0)
+                    errors = errors.at[i_c].set(nerrs)
+                return (errors, s_hat, s_tot, s_delta, s_loss), None
+
+            carry0 = (core.errors, jnp.zeros(d),
+                      jnp.zeros(d if self.comp is not None else 0),
+                      jnp.zeros(d), jnp.zeros(()))
+            (errors, s_hat, s_tot, s_delta, s_loss), _ = lax.scan(
+                body, carry0,
+                (jax.tree.map(shape_c, client_batches),
+                 shape_c(client_idx), shape_c(pos)))
+            hats_mean, loss = s_hat / n, s_loss / n
+            mean_tot, mean_delta = s_tot / n, s_delta / n
+        else:
+            errs = (core.errors[client_idx] if self.comp is not None
+                    else jnp.zeros((n, 0), jnp.float32))
+            hats, new_errs, delta, losses = self._clients_block(
+                start, flat0, client_batches, errs, pos, rng, eta_l, k_all)
+            hats_mean, loss = jnp.mean(hats, axis=0), jnp.mean(losses)
+            if self.comp is not None:
+                mean_tot = jnp.mean(delta + errs, axis=0)
+                errors = core.errors.at[client_idx].set(new_errs)
+            else:
+                mean_tot = None
+                errors = core.errors
+            mean_delta = jnp.mean(delta, axis=0)
+
+        agg = hats_mean
+        gamma = gamma_diagnostic(self.comp, rng, mean_tot, agg, mean_delta)
+
+        # server update on the flat vector
+        xflat, _ = ravel_pytree(core.params)
+        new_flat, opt = server_update(fed, core.opt, xflat, agg)
+
+        # beyond-paper: two-way (server->client) EF compression, appendix D
+        x_client, server_error = server_downlink(
+            fed, self.comp, self.codec, d, rng, new_flat, core.x_client,
+            core.server_error)
+
+        new_params = self.unravel(new_flat)
+        new_core = _CoreState(new_params, opt, errors, server_error, x_client)
+        return new_core, {"loss": loss, "gamma": gamma}

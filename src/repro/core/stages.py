@@ -1,0 +1,218 @@
+"""Shared round stages: the EF→compress→wire plumbing both backends use
+(DESIGN.md §8).
+
+Before the split these lived duplicated inside the rounds monolith — once
+in the simulation's per-client block and once in the mesh ``fed_round``.
+Each stage is a pure function over arrays; the backends (core/sim.py,
+core/mesh.py) compose them around their own execution strategy (vmapped
+flat vectors vs. shard_map collectives over pytree shards).
+
+Simulation-side stages (flat per-client vectors):
+
+* :func:`client_uplink`   — EF + compressor and/or wire codec for a block
+  of client deltas; EF always tracks the value the wire actually carried.
+* :func:`server_downlink` — the beyond-paper two-way (server→client)
+  EF-compressed downlink (paper appendix D).
+* :func:`gamma_diagnostic` — the Assumption 4.17 γ measurement (Fig. 6).
+
+Mesh-side stages (per-device pytree shards + client-axis collectives):
+
+* :func:`agg_dense`        — paper-faithful dense psum aggregation.
+* :func:`sparse_topk_leaf` — wire-size-true blockwise top-k all_gather.
+* :func:`packed_sign_leaf` — 1-bit/coordinate packed-sign all_gather.
+* :func:`mesh_uplink`      — the full uplink: aggregation-strategy
+  selection + masked EF + delta-dtype narrowing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import FedConfig
+from repro.core.compressors import Compressor
+from repro.core.error_feedback import ef_compress, ef_compress_masked
+from repro.sharding.rules import ParallelContext
+
+
+# ===========================================================================
+# Simulation-side stages (flat per-client vectors)
+# ===========================================================================
+
+
+def client_uplink(comp: Optional[Compressor], codec, d: int, rng,
+                  delta, errs, pos):
+    """Local delta → (what the server receives, next EF error) for a block
+    of clients.
+
+    ``delta``: (c, d) flat deltas; ``errs``: (c, d) EF errors — ignored
+    (and returned unchanged) when ``comp`` is None; ``pos``: (c,) global
+    positions in the round (the per-client rng stream). Four cases:
+
+    * comp + codec — wire mode: the EF total really goes through
+      encode→decode; EF tracks the *decoded* value, so narrowed wire value
+      dtypes stay exact in the error-feedback sense.
+    * comp only — in-memory EF compression (``ef_compress``).
+    * codec only — uncompressed algorithm over a dense32 wire.
+    * neither — the delta passes through untouched.
+    """
+    if comp is not None:
+        if codec is not None:
+            def one(dd, ee, i):
+                tot = dd + ee
+                hat = codec.decode(codec.encode(tot), d)
+                return hat, tot - hat
+        else:
+            def one(dd, ee, i):
+                return ef_compress(comp, dd, ee, jax.random.fold_in(rng, i))
+        return jax.vmap(one)(delta, errs, pos)
+    if codec is not None:
+        hats = jax.vmap(lambda t: codec.decode(codec.encode(t), d))(delta)
+    else:
+        hats = delta
+    return hats, errs
+
+
+def server_downlink(fed: FedConfig, comp: Optional[Compressor], codec,
+                    d: int, rng, new_flat, x_client, server_error):
+    """Two-way (server→client) EF compression, paper appendix D.
+
+    Returns ``(new_x_client, new_server_error)``: the model as clients will
+    see it next round plus the carried server-side error. With ``two_way``
+    off the clients see the exact new model and the error passes through."""
+    if not (fed.two_way and comp is not None):
+        return new_flat, server_error
+    upd = new_flat - x_client
+    tot = upd + server_error
+    if codec is not None:  # downlink exercises the wire codec too
+        hat = codec.decode(codec.encode(tot), d)
+    else:
+        hat = comp.compress(tot, jax.random.fold_in(rng, 10**6))
+    return x_client + hat, tot - hat
+
+
+def gamma_diagnostic(comp: Optional[Compressor], rng, mean_tot, agg,
+                     mean_delta):
+    """Assumption 4.17 diagnostic (paper Fig. 6):
+    γ = ‖C(mean(Δ+e)) − mean(C(Δ+e))‖ / ‖mean(Δ)‖ — zero when
+    uncompressed."""
+    if comp is None:
+        return jnp.zeros(())
+    c_of_mean = comp.compress(mean_tot, jax.random.fold_in(rng, 999983))
+    return (jnp.linalg.norm(c_of_mean - agg)
+            / jnp.maximum(jnp.linalg.norm(mean_delta), 1e-12))
+
+
+# ===========================================================================
+# Mesh-side stages (per-device pytree shards, client-axis collectives)
+# ===========================================================================
+
+
+def agg_dense(hat_tree, my_mask, n_eff, ctx: ParallelContext,
+              wire_dtype: str = "float32"):
+    """Paper-faithful: dense psum over the client axes. ``wire_dtype``
+    narrows the collective payload (bf16 halves client-axis bytes; the
+    caller keeps error feedback exact by tracking the narrowed value)."""
+    wd = jnp.dtype(wire_dtype)
+    contrib = jax.tree.map(
+        lambda h: jnp.where(my_mask > 0, h, 0.0).astype(wd), hat_tree)
+    return jax.tree.map(
+        lambda c: ctx.psum_clients(c).astype(jnp.float32) / n_eff, contrib)
+
+
+def sparse_topk_leaf(tot, ratio, my_mask, n_eff, ctx: ParallelContext,
+                     block: int = 2048):
+    """Beyond-paper: all_gather (values, indices) of the local blockwise
+    top-k and scatter-add — the wire carries ~2k words instead of d, and the
+    selection is bit-identical to the dense blocktopk path (same
+    ``block_layout``). Returns (aggregated dense leaf, this client's dense
+    hat for error feedback)."""
+    from repro.core.compressors import block_layout
+    flat = tot.reshape(-1)
+    d = flat.size
+    bs, nb = block_layout(d, block)
+    pad = nb * bs - d
+    xb = jnp.pad(flat, (0, pad)).reshape(nb, bs)
+    k = max(1, int(round(ratio * bs)))
+    _, idx = lax.top_k(jnp.abs(xb), k)                       # (nb, k)
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    gidx = (idx + (jnp.arange(nb) * bs)[:, None]).reshape(-1)
+    kept = vals.reshape(-1)
+    hat = jnp.zeros(nb * bs, flat.dtype).at[gidx].set(kept)[:d]
+    masked = kept * (my_mask > 0)
+    g_vals = ctx.all_gather_clients(masked[None], axis=0).reshape(-1)
+    g_idx = ctx.all_gather_clients(gidx[None], axis=0).reshape(-1)
+    # NB: fresh zeros (replicated vma) — zeros_like(varying) would taint the
+    # aggregate as client-varying.
+    zeros = jnp.zeros(nb * bs, flat.dtype)
+    agg = (zeros.at[g_idx].add(g_vals) / n_eff)[:d]
+    return agg.reshape(tot.shape), hat.reshape(tot.shape)
+
+
+def packed_sign_leaf(tot, my_mask, n_eff, ctx: ParallelContext):
+    """Beyond-paper: scaled-sign with the sign bits packed 8->1 in uint8 for
+    the client-axis all_gather (1 bit/coordinate on the wire)."""
+    flat = tot.reshape(-1)
+    d = flat.size
+    scale = jnp.mean(jnp.abs(flat)) * (my_mask > 0)
+    bits = jnp.packbits((flat >= 0).astype(jnp.uint8))
+    g_bits = ctx.all_gather_clients(bits[None], axis=0)      # (m, d/8)
+    g_scale = ctx.all_gather_clients(scale[None], axis=0)    # (m,)
+    signs = jnp.unpackbits(g_bits, axis=1)[:, :d].astype(jnp.float32) * 2.0 - 1.0
+    agg = (g_scale[:, None] * signs).sum(0) / n_eff
+    # sign(0) := +1 to match the packed bits (error feedback must track the
+    # value the wire actually carried)
+    hat = jnp.mean(jnp.abs(flat)) * jnp.where(flat >= 0, 1.0, -1.0)
+    return agg.reshape(tot.shape), hat.reshape(tot.shape)
+
+
+def _split_pairs(pairs):
+    is_pair = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda pr: pr[0], pairs, is_leaf=is_pair),
+            jax.tree.map(lambda pr: pr[1], pairs, is_leaf=is_pair))
+
+
+def mesh_uplink(fed: FedConfig, comp: Optional[Compressor],
+                ctx: ParallelContext, kernel_impl, rng, delta, my_err,
+                my_mask, n_eff):
+    """This device's delta shards → (aggregated update, next EF error).
+
+    Selects the aggregation strategy (DESIGN.md §3) — dense psum, sparse
+    blockwise-top-k gather, or packed-sign gather — applies masked error
+    feedback, and narrows the dense collective to ``fed.delta_dtype`` with
+    EF tracking the narrowed value."""
+    if comp is None:
+        return agg_dense(delta, my_mask, n_eff, ctx, fed.delta_dtype), my_err
+
+    sparse = fed.aggregation == "sparse"
+    if sparse and fed.compressor in ("topk", "blocktopk", "packedsign"):
+        if fed.compressor == "packedsign":
+            leaf_fn = lambda t: packed_sign_leaf(t, my_mask, n_eff, ctx)
+        else:
+            leaf_fn = lambda t: sparse_topk_leaf(t, fed.compress_ratio,
+                                                 my_mask, n_eff, ctx)
+        tot = jax.tree.map(lambda dd, ee: dd + ee, delta, my_err)
+        agg, hat = _split_pairs(jax.tree.map(leaf_fn, tot))
+        new_err = jax.tree.map(
+            lambda t, h, eo: jnp.where(my_mask > 0, t - h, eo),
+            tot, hat, my_err)
+        return agg, new_err
+
+    if kernel_impl is not None:
+        hat, new_err = kernel_impl.ef_compress_tree(comp, delta, my_err,
+                                                    my_mask)
+    else:
+        hat, new_err = ef_compress_masked(comp, delta, my_err, my_mask,
+                                          jax.random.fold_in(rng, 2))
+    if fed.delta_dtype != "float32":
+        # error feedback must track the value actually sent
+        wd = jnp.dtype(fed.delta_dtype)
+        hat_tx = jax.tree.map(
+            lambda h: h.astype(wd).astype(jnp.float32), hat)
+        new_err = jax.tree.map(
+            lambda d, e, h: jnp.where(my_mask > 0, d + e - h, e),
+            delta, my_err, hat_tx)
+        hat = hat_tx
+    return agg_dense(hat, my_mask, n_eff, ctx, fed.delta_dtype), new_err

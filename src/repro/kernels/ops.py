@@ -1,6 +1,6 @@
 """jit'd pytree wrappers around the Pallas kernels.
 
-``KernelImpl`` plugs into ``core.rounds.build_fed_round(kernel_impl=...)``:
+``KernelImpl`` plugs into ``core.mesh.build_fed_round(kernel_impl=...)``:
 it provides the same (hat, new_err) / server-update contracts as the jnp
 path but runs the compress + update math through the fused kernels. Leaves
 are flattened and zero-padded to a block multiple (zero padding is exact for

@@ -6,7 +6,7 @@ Two-pass structure (the scale  ‖x+e‖₁/d  is a global reduction):
           with the scalar scale broadcast to every tile.
 
 On TPU the sign bits would additionally be packed 8→1 into int8 lanes for
-the wire (see core.rounds._packed_sign_leaf for the collective side); the
+the wire (see core.stages.packed_sign_leaf for the collective side); the
 kernel emits the dense hat used by the local error-feedback update.
 """
 from __future__ import annotations

@@ -22,8 +22,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import (FedConfig, ModelConfig, ShapeConfig,
                                 TrainConfig)
 from repro.configs.registry import ArchSpec
-from repro.core.rounds import (build_fed_round, fed_batch_defs,
-                               fed_state_defs)
+from repro.core.mesh import (build_fed_round, fed_batch_defs,
+                             fed_state_defs)
 from repro.models import params as pdefs
 from repro.models.model import Model
 from repro.sharding.rules import ParallelContext

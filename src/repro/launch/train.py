@@ -34,6 +34,19 @@ def main(argv=None) -> None:
     ap.add_argument("--ratio", type=float, default=1.0 / 64.0)
     ap.add_argument("--aggregation", default="dense")
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-opt", default="sgd",
+                    choices=("sgd", "sgdm", "prox"),
+                    help="local-update rule (core/local.py, DESIGN.md §8)")
+    ap.add_argument("--local-momentum", type=float, default=0.9,
+                    help="heavy-ball beta for --local-opt sgdm")
+    ap.add_argument("--prox-mu", type=float, default=0.01,
+                    help="proximal strength for --local-opt prox")
+    ap.add_argument("--eta-l-decay", type=float, default=1.0,
+                    help="per-round local LR decay (round t trains at "
+                         "eta_l * decay^t; 1.0 = constant)")
+    ap.add_argument("--local-steps-min", type=int, default=0,
+                    help="heterogeneous per-client local work: client i "
+                         "runs K_i ~ U{min..K} steps (0 = homogeneous)")
     ap.add_argument("--participating", type=int, default=0)
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--eta-l", type=float, default=0.05)
@@ -57,8 +70,8 @@ def main(argv=None) -> None:
     from repro import compat
     from repro.configs import FedConfig, TrainConfig
     from repro.configs.registry import get_arch
-    from repro.core.rounds import (build_fed_round, fed_batch_defs,
-                                   fed_state_defs, init_fed_state)
+    from repro.core.mesh import (build_fed_round, fed_batch_defs,
+                                 fed_state_defs, init_fed_state)
     from repro.data.synthetic import FederatedLMData
     from repro.kernels.ops import KernelImpl
     from repro.launch.mesh import make_mesh
@@ -73,6 +86,10 @@ def main(argv=None) -> None:
     fed = FedConfig(algorithm=args.algorithm, compressor=args.compressor,
                     compress_ratio=args.ratio, aggregation=args.aggregation,
                     local_steps=args.local_steps, num_clients=num_clients,
+                    local_opt=args.local_opt,
+                    local_momentum=args.local_momentum,
+                    prox_mu=args.prox_mu, eta_l_decay=args.eta_l_decay,
+                    local_steps_min=args.local_steps_min,
                     participating=args.participating, eta=args.eta,
                     eta_l=args.eta_l,
                     client_axes=("data",) if args.dp > 1 else ())
@@ -99,7 +116,7 @@ def main(argv=None) -> None:
                    donate_argnums=(0,))
     scan_step = None
     if args.scan_rounds and args.scan_rounds > 1:
-        from repro.core.rounds import build_fed_rounds_scan, scan_batch_specs
+        from repro.core.mesh import build_fed_rounds_scan, scan_batch_specs
         scan_step = jax.jit(compat.shard_map(
             build_fed_rounds_scan(rnd), mesh=mesh,
             in_specs=(state_specs, scan_batch_specs(batch_specs), P(None)),
@@ -116,7 +133,7 @@ def main(argv=None) -> None:
                            vocab_size=cfg.vocab_size, seed=train.seed)
     t0 = time.time()
     if scan_step is not None:
-        from repro.core.rounds import stage_mesh_rounds
+        from repro.core.mesh import stage_mesh_rounds
         r = 0
         while r < train.rounds:
             chunk = min(args.scan_rounds, train.rounds - r)

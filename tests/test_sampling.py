@@ -1,0 +1,96 @@
+"""Direct coverage for core/sampling.py (paper §3.2): without-replacement
+sampling with uniform inclusion frequency, mask shapes/sizes, and the
+Gumbel weighted sampler's weight monotonicity — previously only exercised
+indirectly through the round executors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampling import (participation_mask, sample_clients,
+                                 weighted_participation_mask)
+
+
+def test_sample_clients_without_replacement():
+    m, n = 20, 8
+    for s in range(50):
+        idx = np.asarray(sample_clients(jax.random.PRNGKey(s), m, n))
+        assert idx.shape == (n,) and idx.dtype == np.int32
+        assert len(np.unique(idx)) == n          # no replacement
+        assert idx.min() >= 0 and idx.max() < m
+
+
+@pytest.mark.parametrize("n", [0, 20, 25])
+def test_sample_clients_full_participation_edge(n):
+    """n in {0, m, >m} means full participation: identity permutation."""
+    idx = np.asarray(sample_clients(jax.random.PRNGKey(0), 20, n))
+    np.testing.assert_array_equal(idx, np.arange(20))
+
+
+def test_sample_clients_uniform_inclusion_frequency():
+    """P{i ∈ S_t} = n/m for every client (paper §3.2): over many rounds the
+    per-client inclusion frequency concentrates around n/m."""
+    m, n, rounds = 16, 4, 2000
+    counts = np.zeros(m)
+    for s in range(rounds):
+        counts[np.asarray(sample_clients(jax.random.PRNGKey(s), m, n))] += 1
+    freq = counts / rounds
+    # binomial std per client is sqrt(p(1-p)/rounds) ≈ 0.0097; 5 sigma
+    np.testing.assert_allclose(freq, n / m, atol=0.05)
+
+
+def test_participation_mask_size_and_membership():
+    m, n = 20, 6
+    rng = jax.random.PRNGKey(3)
+    mask = np.asarray(participation_mask(rng, m, n))
+    assert mask.shape == (m,)
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    assert mask.sum() == n
+    # the mask marks exactly the sampled indices (shared rng => same draw)
+    idx = np.asarray(sample_clients(rng, m, n))
+    np.testing.assert_array_equal(np.flatnonzero(mask), np.sort(idx))
+
+
+def test_participation_mask_full_when_n_zero_or_m():
+    for n in (0, 8):
+        mask = np.asarray(participation_mask(jax.random.PRNGKey(0), 8, n))
+        np.testing.assert_array_equal(mask, np.ones(8))
+
+
+def test_weighted_mask_size_and_full_participation():
+    w = jnp.ones(10)
+    mask = np.asarray(weighted_participation_mask(jax.random.PRNGKey(0), w, 4))
+    assert mask.shape == (10,) and mask.sum() == 4
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    for n in (0, 10, 12):
+        full = np.asarray(weighted_participation_mask(
+            jax.random.PRNGKey(0), w, n))
+        np.testing.assert_array_equal(full, np.ones(10))
+
+
+def test_weighted_mask_monotone_in_weight():
+    """Inclusion frequency must increase with weight (Gumbel top-n samples
+    ∝ weights without replacement): a client with 8x the weight of another
+    is selected more often; zero-ish weight is (almost) never selected."""
+    m, n, rounds = 8, 2, 1500
+    weights = jnp.asarray([8.0, 4.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1e-30])
+    counts = np.zeros(m)
+    for s in range(rounds):
+        mask = np.asarray(weighted_participation_mask(
+            jax.random.PRNGKey(s), weights, n))
+        counts += mask
+    freq = counts / rounds
+    assert freq[0] > freq[1] > freq[3]      # monotone across 8x/4x/1x
+    assert freq[0] > 2.5 * freq[3]          # and materially so
+    assert freq[7] < 0.01                   # ~zero weight ~never sampled
+
+
+def test_weighted_mask_uniform_weights_match_unweighted_frequency():
+    """With uniform weights the Gumbel sampler reduces to uniform
+    without-replacement sampling: inclusion frequency ≈ n/m."""
+    m, n, rounds = 12, 3, 1500
+    counts = np.zeros(m)
+    for s in range(rounds):
+        counts += np.asarray(weighted_participation_mask(
+            jax.random.PRNGKey(s), jnp.ones(m), n))
+    np.testing.assert_allclose(counts / rounds, n / m, atol=0.05)

@@ -48,10 +48,19 @@ def _flat(params):
 
 @pytest.mark.parametrize("fed_kw", [{}, {"wire": True},
                                     {"wire": True, "two_way": True},
-                                    {"compressor": "sign"}])
+                                    {"compressor": "sign"},
+                                    {"local_opt": "sgdm"},
+                                    {"local_opt": "prox"},
+                                    {"eta_l_decay": 0.9},
+                                    {"local_steps_min": 1},
+                                    {"local_opt": "sgdm", "eta_l_decay": 0.9,
+                                     "local_steps_min": 1,
+                                     "client_chunk": 2}])
 def test_scan_driver_bit_identical_to_loop(fed_kw):
     """run_rounds == R x round: same final state AND same per-round
-    metrics, bit for bit (including wire/transport metrics)."""
+    metrics, bit for bit (including wire/transport metrics, the local-rule
+    carries, the eta_l_decay round-index threading, and the
+    heterogeneous-K draws)."""
     R = 5
     batches, idx, keys = _stage(R)
 
@@ -109,7 +118,7 @@ def test_donated_round_matches_pure_computation():
         saved = _CoreState(*jax.tree.map(lambda x: jnp.array(np.asarray(x)),
                                          _CoreState(*st[:5])))
         st, _ = sim.round(st, b_r, idx[r], keys[r])
-        ref_core, _ = pure_fn(saved, b_r, idx[r], keys[r])
+        ref_core, _ = pure_fn(saved, b_r, idx[r], keys[r], jnp.int32(r))
         assert bool(jnp.all(st.errors == ref_core.errors)), f"round {r}"
         assert bool(jnp.all(_flat(st.params) == _flat(ref_core.params)))
         assert bool(jnp.all(st.x_client == ref_core.x_client))
@@ -223,8 +232,14 @@ def test_trainer_scan_checkpoints_at_chunk_boundaries(tmp_path, monkeypatch):
     assert (tmp_path / "ckpt_round5" / "manifest.json").exists()
 
 
-def test_trainer_scan_rounds_mesh_backend():
-    """Mesh backend scan driver: same history as the per-round mesh loop."""
+@pytest.mark.parametrize("fed_kw", [{}, {"local_opt": "sgdm"},
+                                    {"local_opt": "prox"},
+                                    {"eta_l_decay": 0.9,
+                                     "local_steps_min": 1}])
+def test_trainer_scan_rounds_mesh_backend(fed_kw):
+    """Mesh backend scan driver: same history as the per-round mesh loop,
+    for every local rule and scenario knob (the scan carries the local-rule
+    state and the device round counter the eta_l schedule reads)."""
     from repro.core.api import FederatedTrainer
     from repro.data.synthetic import FederatedLMData
     from repro.launch.mesh import make_mesh
@@ -237,7 +252,7 @@ def test_trainer_scan_rounds_mesh_backend():
     def make():
         tr = FederatedTrainer(
             fed=FedConfig(algorithm="fedams", num_clients=1, local_steps=2,
-                          client_axes=(), eta=0.3, eta_l=0.05),
+                          client_axes=(), eta=0.3, eta_l=0.05, **fed_kw),
             train=TrainConfig(global_batch=4, seq_len=16, rounds=5,
                               remat_policy="none", log_every=100),
             model=Model(cfg, tp=1), mesh=make_mesh((1, 1), ("data", "model")))
