@@ -34,6 +34,30 @@ scenario knobs on the overhead-bound config — the sgd number doubles as the
 regression gate for the rounds-monolith → layered-engine split (the split
 must cost no scan-driver throughput).
 
+A fourth dimension measures the select-once sparse uplink (DESIGN.md §3)
+on ``compression_bound``: d ≈ 1.15e6 (pad-free: 560 blocks of 2048),
+blockwise top-1 (ratio 1/2048), K=1, batch=1, wire on, γ diagnostic off —
+the regime where the round is dominated by the uplink's O(n·d) memory
+passes rather than local training. Dense (``sparse_uplink=False``, the
+reference pipeline: per-client encode→bytes→dense-scatter decode→(n, d)
+hat block→dense mean→dense EF rebuild) is A/B'd against the sparse path
+(one selection per client — an argmax reduce at k'=1, never a sort-based
+``lax.top_k``; the (vals, idx) pair flows to an O(n·k + d) server scatter;
+EF touches only selected coordinates), both end-to-end and as the isolated
+uplink+aggregate stage.
+
+Container caveat (mirrors PR-2's 5x note): the ISSUE's ≥3x target for
+sparse-vs-dense presumes an accelerator-class host where the dense path's
+(n, d) hat block + mean is HBM-traffic-bound and the compacted
+(vals, idx) block (kernels.topk_ef_sparse emits it in a single HBM pass)
+removes that traffic. On this 2-vCPU CPU container XLA fuses the dense
+path's extra passes into the same bandwidth-bound streams the round
+already pays (EF gather/update, local training), and CPU scatter costs
+~100 ns/update, so the measured end-to-end win is ~1.2x at k'=1 (parity
+at ratio 1/64, where the shared sort-based top-k dominates both paths)
+with ~1.4x on the overhead-bound config. The CI gate asserts the sparse
+path never regresses below the dense one on this config.
+
 Writes everything to ``BENCH_rounds.json`` at the repo root (via
 benchmarks.common) so the perf trajectory is tracked across PRs.
 """
@@ -63,6 +87,16 @@ OVERHEAD = dict(name="overhead_bound",
 FED_KW = dict(algorithm="fedcams", num_clients=50, participating=10,
               compressor="topk", compress_ratio=1 / 64, eta=0.1, eta_l=0.05,
               wire=True)
+# d = 1058² + (16+2+8)·1058 + 8 = 1,146,880 = 560 · 2048 exactly (no padded
+# tail anywhere in the pipeline); blockwise top-1 is the compression-bound
+# point: selection is a reduce and the message is 560 (val, idx) pairs.
+COMPRESSION = dict(name="compression_bound",
+                   mlp=dict(in_dim=16, hidden=1058, depth=2, num_classes=8),
+                   local_steps=1, batch=1)
+COMPRESSION_FED_KW = dict(algorithm="fedcams", num_clients=10,
+                          participating=10, compressor="blocktopk",
+                          compress_ratio=1 / 2048, wire_block=2048,
+                          eta=0.1, eta_l=0.05, wire=True, track_gamma=False)
 
 
 def _make_sim(cfg):
@@ -186,6 +220,143 @@ def measure(cfg, rounds: int) -> dict:
     }
 
 
+def _measure_sparse_ab(cfg, fed_kw, rounds: int, reps: int) -> dict:
+    """Scan-driver rounds/s for sparse_uplink True vs False on identical
+    staged inputs (median of ``reps`` runs — this container is noisy)."""
+    data = FederatedClassification(num_clients=fed_kw["num_clients"],
+                                   num_classes=cfg["mlp"]["num_classes"],
+                                   feature_dim=cfg["mlp"]["in_dim"], seed=0)
+    rng = jax.random.PRNGKey(1)
+    idxs, keys, batches = [], [], []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, fed_kw["num_clients"],
+                                        fed_kw["participating"]))
+        batches.append(data.round_batches(idx, r, cfg["local_steps"],
+                                          cfg["batch"]))
+        idxs.append(idx)
+        keys.append(k2)
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    idx, keys = jnp.asarray(np.stack(idxs)), jnp.stack(keys)
+
+    mc = MLPConfig(**cfg["mlp"])
+    sims, ts = {}, {"dense": [], "sparse": []}
+    out = {}
+    for sparse in (False, True):
+        fed = FedConfig(local_steps=cfg["local_steps"],
+                        sparse_uplink=sparse, **fed_kw)
+        sims["sparse" if sparse else "dense"] = FedSim(
+            lambda p, b: mlp_loss(p, b, mc), fed)
+    # interleaved A/B, fastest-of-N per path: this container's run-to-run
+    # noise (±30-40%) would otherwise dominate the measured ratio
+    for rep in range(reps + 1):         # first pair compiles
+        for key, sim in sims.items():
+            if sim.network is not None:
+                sim.network = type(sim.network)(sim.network.cfg,
+                                                fed_kw["num_clients"])
+                sim.comm_log = type(sim.comm_log)()
+            st = sim.init(pdefs.init_params(mlp_defs(mc),
+                                            jax.random.PRNGKey(0)))
+            t0 = time.perf_counter()
+            st, mets = sim.run_rounds(st, stacked, idx, keys)
+            jax.block_until_ready(st.params)
+            ts[key].append(time.perf_counter() - t0)
+            out[f"{key}_final_loss"] = float(mets[-1]["loss"])
+    for key in sims:
+        out[f"{key}_rounds_per_s"] = rounds / float(np.min(ts[key][1:]))
+    out["speedup_sparse_vs_dense"] = (out["sparse_rounds_per_s"]
+                                      / out["dense_rounds_per_s"])
+    return out
+
+
+def _measure_uplink_stage(d: int, n: int, fed_kw, rounds: int,
+                          reps: int) -> dict:
+    """The tentpole in isolation: EF→select/compress→aggregate over staged
+    (rounds, n, d) deltas, scanned — no local training, no server update.
+    Uses the same stage functions the round composes (core/stages.py)."""
+    import functools
+
+    from repro.comm import make_wire_codec
+    from repro.core.compressors import make_compressor
+    from repro.core.stages import (client_uplink, client_uplink_sparse,
+                                   ef_update_sparse, server_aggregate_sparse)
+
+    comp = make_compressor(fed_kw["compressor"], fed_kw["compress_ratio"],
+                           fed_kw["wire_block"])
+    codec = make_wire_codec(fed_kw["compressor"], fed_kw["compress_ratio"],
+                            fed_kw["wire_block"])
+    m = fed_kw["num_clients"]
+    rng = jax.random.PRNGKey(0)
+    deltas = 0.01 * jax.random.normal(rng, (rounds, n, d), jnp.float32)
+    cidx = jnp.stack([jax.random.permutation(jax.random.fold_in(rng, r),
+                                             m)[:n] for r in range(rounds)])
+    pos = jnp.arange(n)
+
+    def dense_body(errors, inp):
+        delta, ci = inp
+        errs = errors[ci]
+        hats, nerrs = client_uplink(comp, codec, d, rng, delta, errs, pos)
+        return errors.at[ci].set(nerrs), jnp.mean(hats, axis=0)
+
+    def sparse_body(errors, inp):
+        delta, ci = inp
+        errors = errors.at[ci].add(delta)
+        vals, sidx, rxv = client_uplink_sparse(comp, codec, d, rng,
+                                               errors[ci], pos)
+        errors = ef_update_sparse(errors, ci, sidx, vals, rxv)
+        return errors, server_aggregate_sparse(rxv, sidx, d, n)
+
+    def make_fn(body):
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def scan_fn(errors, dd, ii):
+            return jax.lax.scan(body, errors, (dd, ii))
+        return scan_fn
+
+    fns = {"dense": make_fn(dense_body), "sparse": make_fn(sparse_body)}
+    # interleaved A/B, fastest-of-N per path (see _measure_sparse_ab)
+    ts = {"dense": [], "sparse": []}
+    for rep in range(reps + 1):
+        for key, fn in fns.items():
+            errors = jnp.zeros((m, d), jnp.float32)
+            t0 = time.perf_counter()
+            errors, aggs = fn(errors, deltas, cidx)
+            jax.block_until_ready(aggs)
+            ts[key].append(time.perf_counter() - t0)
+    out = {f"{k}_rounds_per_s": rounds / float(np.min(v[1:]))
+           for k, v in ts.items()}
+    out["speedup_sparse_vs_dense"] = (out["sparse_rounds_per_s"]
+                                      / out["dense_rounds_per_s"])
+    return out
+
+
+def measure_compression_bound(rounds: int, reps: int = 3) -> dict:
+    """The sparse-uplink dimension: end-to-end A/B plus the isolated
+    uplink+aggregate stage on the compression-bound config (see module
+    docstring for the container caveat on the ISSUE's 3x target)."""
+    cfg = COMPRESSION
+    mc = MLPConfig(**cfg["mlp"])
+    d = sum(int(np.prod(s)) for s in
+            [(mc.in_dim, mc.hidden), (mc.hidden,),
+             (mc.hidden, mc.hidden), (mc.hidden,),
+             (mc.hidden, mc.num_classes), (mc.num_classes,)])
+    e2e = _measure_sparse_ab(cfg, COMPRESSION_FED_KW, rounds, reps)
+    stage = _measure_uplink_stage(d, COMPRESSION_FED_KW["participating"],
+                                  COMPRESSION_FED_KW,
+                                  max(rounds, 4), reps)
+    return {
+        "config": dict(COMPRESSION_FED_KW, rounds=rounds, d=d,
+                       **{k: v for k, v in cfg.items() if k != "name"}),
+        "e2e": e2e,
+        "uplink_stage": stage,
+        "note": ("sparse = select-once (vals, idx) pipeline, DESIGN.md §3; "
+                 "dense = reference encode->decode->dense-mean path. "
+                 "See bench_rounds docstring: the ISSUE's >=3x presumes "
+                 "accelerator-class HBM-bound aggregation; on this 2-vCPU "
+                 "CPU container the dense path's extra passes fuse into "
+                 "the round's shared bandwidth-bound streams."),
+    }
+
+
 def measure_local_rules(rounds: int) -> dict:
     """The local-rule dimension (core/local.py): scan-driver throughput per
     rule on the overhead-bound config. sgd is the pre-split round — its
@@ -255,6 +426,15 @@ def main():
         rows.append(csv_row(
             f"rounds_local_{name}", 1e6 * (1 / p["scan_rounds_per_s"]),
             f"rounds_per_s={p['scan_rounds_per_s']:.1f}"))
+    cb = measure_compression_bound(4 if QUICK else 8, reps=3 if QUICK else 5)
+    payload["compression_bound"] = cb
+    rows.append(csv_row(
+        "rounds_compression_bound_sparse",
+        1e6 * (1 / cb["e2e"]["sparse_rounds_per_s"]),
+        f"rounds_per_s={cb['e2e']['sparse_rounds_per_s']:.2f};"
+        f"e2e_speedup_vs_dense={cb['e2e']['speedup_sparse_vs_dense']:.2f}x;"
+        f"uplink_stage_speedup="
+        f"{cb['uplink_stage']['speedup_sparse_vs_dense']:.2f}x"))
     update_bench_json(payload)
     return rows
 

@@ -42,15 +42,15 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.compressors import (Compressor, block_layout, make_blocktopk,
-                                    make_compressor, make_identity, make_sign,
-                                    make_topk)
+from repro.core.compressors import (Compressor, Selection, block_layout,
+                                    make_blocktopk, make_compressor,
+                                    make_identity, make_sign, make_topk)
 
 HEADER_BYTES = 16
 MAGIC = 0xFC
@@ -147,13 +147,33 @@ def parse_header(buf) -> dict:
 class WireCodec:
     """A serializer for compressed deltas.
 
-    ``encode(x)`` maps a flat fp32 vector to a packed uint8 buffer;
-    ``decode(buf, d)`` maps it back to the dense fp32 representation
-    (``d`` must be the original length — it is static under jit).
-    ``nbytes(d)`` is the exact buffer size, so measured wire bytes are
-    available without encoding. ``compressor`` is the dense-path
-    :class:`Compressor` this codec is the wire format of; ``exact`` states
-    whether ``decode(encode(x)) == compressor.compress(x)`` bit-for-bit.
+    ``encode(x, rng=None)`` maps a flat fp32 vector to a packed uint8
+    buffer; ``decode(buf, d)`` maps it back to the dense fp32
+    representation (``d`` must be the original length — it is static under
+    jit). ``rng`` is the per-client key the integration threads through
+    (core.stages) — today's codecs are deterministic and ignore it, but the
+    plumbing keeps stochastic codecs (e.g. randomized rounding) from
+    desyncing client streams later. ``nbytes(d)`` is the exact buffer size,
+    so measured wire bytes are available without encoding. ``compressor``
+    is the dense-path :class:`Compressor` this codec is the wire format of;
+    ``exact`` states whether ``decode(encode(x)) == compressor.compress(x)``
+    bit-for-bit.
+
+    Selection fast path (sparse uplink, DESIGN.md §3): codecs whose payload
+    is (value, index) pairs also provide
+
+    * ``encode_from_selection(sel, d)`` — pack an already-computed
+      :class:`Selection` (byte-identical to ``encode(x)`` when ``sel`` is
+      the compressor's own selection of ``x``), so wire mode never re-runs
+      ``lax.top_k`` on the dense vector;
+    * ``decode_to_selection(buf, d)`` — unpack straight back to a
+      :class:`Selection` without materializing the dense vector;
+    * ``roundtrip_selection(sel, d)`` — what the server receives:
+      bit-identical shortcut for
+      ``decode_to_selection(encode_from_selection(sel, d), d)`` that skips
+      the byte shuffling (the identity for ``exact`` codecs; the pure
+      value-narrowing for fp16/bf16/int8 values — indices always survive
+      the wire exactly). Property-tested against the full byte roundtrip.
     """
 
     name: str
@@ -163,10 +183,13 @@ class WireCodec:
     compressor: Compressor
     exact: bool = True
     header_bytes: int = field(default=HEADER_BYTES)
+    encode_from_selection: Optional[Callable] = None
+    decode_to_selection: Optional[Callable] = None
+    roundtrip_selection: Optional[Callable] = None
 
 
 def make_dense32_codec() -> WireCodec:
-    def encode(x):
+    def encode(x, rng=None):
         flat = x.reshape(-1).astype(jnp.float32)
         return jnp.concatenate(
             [_header("dense32", "float32", flat.size, 0, 0), _to_bytes(flat)])
@@ -187,27 +210,44 @@ def make_topk_codec(ratio: float, value_dtype: str = "float32") -> WireCodec:
     def k_of(d: int) -> int:
         return max(1, int(round(ratio * d)))
 
-    def encode(x):
+    def encode_from_selection(sel: Selection, d: int):
+        vals = sel.vals.astype(vdt)
+        return jnp.concatenate([
+            _header("topk", value_dtype, d, k_of(d), 0),
+            _to_bytes(sel.idx.astype(jnp.uint32)), _to_bytes(vals)])
+
+    def encode(x, rng=None):
         flat = x.reshape(-1).astype(jnp.float32)
         d = flat.size
         k = k_of(d)
         _, idx = lax.top_k(jnp.abs(flat), k)
-        vals = flat[idx].astype(vdt)
-        return jnp.concatenate([
-            _header("topk", value_dtype, d, k, 0),
-            _to_bytes(idx.astype(jnp.uint32)), _to_bytes(vals)])
+        return encode_from_selection(
+            Selection(vals=flat[idx], idx=idx.astype(jnp.int32)), d)
 
-    def decode(buf, d: int):
+    def decode_to_selection(buf, d: int) -> Selection:
         k = k_of(d)
         off = HEADER_BYTES
         idx = _from_bytes(buf[off:], jnp.uint32, k)
         vals = _from_bytes(buf[off + 4 * k:], vdt, k).astype(jnp.float32)
-        return jnp.zeros(d, jnp.float32).at[idx].set(vals)
+        return Selection(vals=vals, idx=idx.astype(jnp.int32))
+
+    def decode(buf, d: int):
+        sel = decode_to_selection(buf, d)
+        return jnp.zeros(d, jnp.float32).at[sel.idx].set(sel.vals)
+
+    def roundtrip_selection(sel: Selection, d: int) -> Selection:
+        if value_dtype == "float32":
+            return sel
+        return Selection(vals=sel.vals.astype(vdt).astype(jnp.float32),
+                         idx=sel.idx)
 
     return WireCodec(
         name=f"topk_{ratio:g}_{value_dtype}", encode=encode, decode=decode,
         nbytes=lambda d: HEADER_BYTES + k_of(d) * (4 + vb),
-        compressor=make_topk(ratio), exact=value_dtype == "float32")
+        compressor=make_topk(ratio), exact=value_dtype == "float32",
+        encode_from_selection=encode_from_selection,
+        decode_to_selection=decode_to_selection,
+        roundtrip_selection=roundtrip_selection)
 
 
 def make_blocktopk_codec(ratio: float, block: int = 2048,
@@ -226,25 +266,42 @@ def make_blocktopk_codec(ratio: float, block: int = 2048,
         ib = max(1, math.ceil(math.log2(bs)))
         return bs, nb, kb, ib
 
-    def encode(x):
-        flat = x.reshape(-1).astype(jnp.float32)
-        d = flat.size
+    def _quantize(vals):
+        """Per-block int8 quantization of (nb, kb) kept values; returns
+        (scale (nb,), q (nb, kb) int8)."""
+        scale = jnp.maximum(jnp.max(jnp.abs(vals), axis=1), 1e-30) / 127.0
+        return scale, jnp.round(vals / scale[:, None]).astype(jnp.int8)
+
+    def encode_from_selection(sel: Selection, d: int):
         bs, nb, kb, ib = layout(d)
-        xb = jnp.pad(flat, (0, nb * bs - d)).reshape(nb, bs)
-        _, idx = lax.top_k(jnp.abs(xb), kb)              # (nb, kb)
-        vals = jnp.take_along_axis(xb, idx, axis=1)
+        # Selection carries padded-domain global positions in block order;
+        # the wire packs block-local offsets at ib bits each.
+        gidx = sel.idx.reshape(nb, kb)
+        idx = gidx - (jnp.arange(nb, dtype=jnp.int32) * bs)[:, None]
+        vals = sel.vals.reshape(nb, kb)
         parts = [_header("blocktopk", value_dtype, d, kb, bs),
                  pack_uint(idx.astype(jnp.uint32), ib, pack_impl)]
         if int8:
-            scale = jnp.maximum(jnp.max(jnp.abs(vals), axis=1), 1e-30) / 127.0
-            q = jnp.round(vals / scale[:, None]).astype(jnp.int8)
+            scale, q = _quantize(vals)
             parts += [_to_bytes(scale.astype(jnp.float32)),
                       lax.bitcast_convert_type(q, jnp.uint8).reshape(-1)]
         else:
             parts.append(_to_bytes(vals.astype(vdt)))
         return jnp.concatenate(parts)
 
-    def decode(buf, d: int):
+    def encode(x, rng=None):
+        flat = x.reshape(-1).astype(jnp.float32)
+        d = flat.size
+        bs, nb, kb, ib = layout(d)
+        xb = jnp.pad(flat, (0, nb * bs - d)).reshape(nb, bs)
+        _, idx = lax.top_k(jnp.abs(xb), kb)              # (nb, kb)
+        vals = jnp.take_along_axis(xb, idx, axis=1)
+        gidx = idx.astype(jnp.int32) + (jnp.arange(nb, dtype=jnp.int32)
+                                        * bs)[:, None]
+        return encode_from_selection(
+            Selection(vals=vals.reshape(-1), idx=gidx.reshape(-1)), d)
+
+    def decode_to_selection(buf, d: int) -> Selection:
         bs, nb, kb, ib = layout(d)
         off = HEADER_BYTES
         nidx = (nb * kb * ib + 7) // 8
@@ -259,9 +316,28 @@ def make_blocktopk_codec(ratio: float, block: int = 2048,
         else:
             vals = _from_bytes(buf[off:], vdt, nb * kb)
             vals = vals.reshape(nb, kb).astype(jnp.float32)
-        out = jnp.zeros((nb, bs), jnp.float32).at[
-            jnp.arange(nb)[:, None], idx].set(vals)
-        return out.reshape(-1)[:d]
+        gidx = idx.astype(jnp.int32) + (jnp.arange(nb, dtype=jnp.int32)
+                                        * bs)[:, None]
+        return Selection(vals=vals.reshape(-1), idx=gidx.reshape(-1))
+
+    def decode(buf, d: int):
+        bs, nb, kb, ib = layout(d)
+        sel = decode_to_selection(buf, d)
+        out = jnp.zeros(nb * bs, jnp.float32).at[sel.idx].set(sel.vals)
+        return out[:d]
+
+    def roundtrip_selection(sel: Selection, d: int) -> Selection:
+        if value_dtype == "float32":
+            return sel
+        bs, nb, kb, ib = layout(d)
+        vals = sel.vals.reshape(nb, kb)
+        if int8:
+            scale, q = _quantize(vals)
+            vals = q.astype(jnp.float32) * scale.astype(
+                jnp.float32)[:, None]
+        else:
+            vals = vals.astype(vdt).astype(jnp.float32)
+        return Selection(vals=vals.reshape(-1), idx=sel.idx)
 
     def nbytes(d: int) -> int:
         bs, nb, kb, ib = layout(d)
@@ -272,7 +348,10 @@ def make_blocktopk_codec(ratio: float, block: int = 2048,
         name=f"blocktopk_{ratio:g}_{value_dtype}", encode=encode,
         decode=decode, nbytes=nbytes,
         compressor=make_blocktopk(ratio, block),
-        exact=value_dtype == "float32")
+        exact=value_dtype == "float32",
+        encode_from_selection=encode_from_selection,
+        decode_to_selection=decode_to_selection,
+        roundtrip_selection=roundtrip_selection)
 
 
 def _pack_sign_bits(bits_u8, pack_impl: str):
@@ -314,7 +393,7 @@ def make_sign_codec(block: int = 0, pack_impl: str = "jnp") -> WireCodec:
         counts = jnp.clip(d - jnp.arange(nb) * block, 0, block)
         return jnp.sum(xb, axis=1) / counts
 
-    def encode(x):
+    def encode(x, rng=None):
         flat = x.reshape(-1).astype(jnp.float32)
         d = flat.size
         return jnp.concatenate([

@@ -250,7 +250,21 @@ class FedConfig:
     participating: int = 0         # n; 0 => full participation
     compressor: str = "topk"       # topk|blocktopk|sign|packedsign|randk|int8|none
     compress_ratio: float = 1.0 / 64.0   # r = k/d for top-k family
+    # FedSim select-once sparse uplink (DESIGN.md §3): the top-k selection
+    # runs once per client and the (vals, idx) pair flows end-to-end into an
+    # O(n·k + d) server scatter — no dense per-client hat, no dense (n, d)
+    # mean. None = auto (on for the topk/blocktopk family), False = force
+    # the dense reference path, True = require it (rejects compressors with
+    # no compacted form). Selection and error feedback are bit-identical to
+    # the dense path; the aggregate matches up to scatter-vs-reduce
+    # float reassociation on coordinates several clients selected.
+    sparse_uplink: Optional[bool] = None
     aggregation: str = "dense"     # dense | sparse  (see DESIGN.md §3)
+    # Compute the per-round Assumption 4.17 γ diagnostic (paper Fig. 6).
+    # It costs an extra dense compression of the mean total per round;
+    # production-style perf runs turn it off and the history reports
+    # gamma=0.0 (metric keys unchanged).
+    track_gamma: bool = True
     delta_dtype: str = "float32"   # wire dtype for the dense client collective
     two_way: bool = False          # beyond-paper: compress server->client too
     # -- wire mode (repro.comm): encode every delta to packed bytes, move
@@ -284,6 +298,12 @@ class FedConfig:
         check("aggregation", self.aggregation, FED_AGGREGATIONS)
         check("local_opt", self.local_opt, FED_LOCAL_OPTS)
         check("wire_pack_impl", self.wire_pack_impl, ("jnp", "pallas"))
+        check("sparse_uplink", self.sparse_uplink, (None, True, False))
+        if self.sparse_uplink and self.compressor not in ("topk",
+                                                          "blocktopk"):
+            raise ValueError(
+                f"FedConfig.sparse_uplink=True requires a (value, index) "
+                f"compressor (topk/blocktopk), got {self.compressor!r}")
         if not 0.0 < self.eta_l_decay <= 1.0:
             raise ValueError(
                 f"FedConfig.eta_l_decay={self.eta_l_decay} must be in (0, 1]")

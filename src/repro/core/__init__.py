@@ -4,7 +4,8 @@ Public surface: compressors, error feedback, local-update rules, server
 optimizers, the shared round stages, and the two round backends (core/sim.py
 FedSim simulation + core/mesh.py build_fed_round mesh SPMD)."""
 from repro.core.api import FederatedTrainer  # noqa: F401
-from repro.core.compressors import Compressor, make_compressor  # noqa: F401
+from repro.core.compressors import (Compressor, Selection,  # noqa: F401
+                                    make_compressor, selection_to_dense)
 from repro.core.error_feedback import ef_compress, ef_compress_masked  # noqa: F401
 from repro.core.local import LocalUpdate, make_local_update  # noqa: F401
 from repro.core.mesh import (FedMeshState, build_fed_round,  # noqa: F401

@@ -9,16 +9,43 @@ contraction constant of Assumption 4.14, property-tested in
 ``blocktopk`` is the TPU-native variant (DESIGN.md §3): exact top-k' inside
 fixed-size blocks. Per block ‖C(x_b)−x_b‖² ≤ (1−k'/B)‖x_b‖², so the global
 contraction bound q = sqrt(1−r) is preserved.
+
+Sparse-friendly compressors (the top-k family) additionally expose
+``select(x) -> Selection``: the same selection as ``compress`` but as a
+compacted ``(vals, idx)`` pair instead of a dense scatter — the
+representation the sparse uplink fast path (DESIGN.md §3) keeps alive from
+client to server aggregate. ``selection_to_dense(select(x), d) ==
+compress(x)`` bit-for-bit is property-tested.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+class Selection(NamedTuple):
+    """A compacted top-k selection of a flat length-d vector.
+
+    ``vals[j]`` is the kept value at flat position ``idx[j]``. For blockwise
+    compressors the pairs are grouped per block in block order (``(nb, kb)``
+    flattened row-major) and ``idx`` may point into the zero-padded tail of
+    the last block (``idx >= d``); those entries carry value 0.0 and are
+    dropped by :func:`selection_to_dense` (JAX scatter drops out-of-bounds
+    updates), mirroring the dense path's pad-and-slice."""
+
+    vals: jax.Array   # (k,) float32 kept values
+    idx: jax.Array    # (k,) int32 flat positions (padded domain for blocks)
+
+
+def selection_to_dense(sel: Selection, d: int) -> jnp.ndarray:
+    """Dense length-``d`` vector carrying the selection (the compressor's
+    ``compress`` output, reconstructed from the sparse representation)."""
+    return jnp.zeros(d, jnp.float32).at[sel.idx].set(sel.vals)
 
 
 @dataclass(frozen=True)
@@ -28,6 +55,9 @@ class Compressor:
     bits_per_message: Callable              # d -> wire bits
     q_bound: Callable                       # (x,) -> q (Assumption 4.14)
     ratio: float = 1.0
+    # (x, rng=None) -> Selection; None for compressors whose messages are
+    # not (value, index) pairs (sign/int8/identity)
+    select: Optional[Callable] = None
 
 
 def _topk_flat(x, k):
@@ -37,10 +67,31 @@ def _topk_flat(x, k):
     return out.reshape(x.shape)
 
 
+def _argmax_select(xb):
+    """Exact top-1 per row of ``xb`` as (vals, idx) — bit-identical to
+    ``lax.top_k(|xb|, 1)`` (both keep the lowest index on ties) but a plain
+    reduction instead of a sort-based top-k, which is the difference between
+    the sparse fast path and the dense baseline at extreme ratios."""
+    iidx = jnp.argmax(jnp.abs(xb), axis=-1)
+    vals = jnp.take_along_axis(xb, iidx[..., None], axis=-1)[..., 0]
+    return vals, iidx.astype(jnp.int32)
+
+
 def make_topk(ratio: float) -> Compressor:
+    def k_of(d: int) -> int:
+        return max(1, int(round(ratio * d)))
+
     def compress(x, rng=None):
-        k = max(1, int(round(ratio * x.size)))
-        return _topk_flat(x, k)
+        return _topk_flat(x, k_of(x.size))
+
+    def select(x, rng=None):
+        flat = x.reshape(-1)
+        k = k_of(flat.size)
+        if k == 1:
+            vals, idx = _argmax_select(flat[None])
+            return Selection(vals=vals, idx=idx)
+        _, idx = lax.top_k(jnp.abs(flat), k)
+        return Selection(vals=flat[idx], idx=idx.astype(jnp.int32))
 
     return Compressor(
         name=f"topk_{ratio:g}",
@@ -49,6 +100,7 @@ def make_topk(ratio: float) -> Compressor:
         bits_per_message=lambda d: 64 * max(1, int(round(ratio * d))),
         q_bound=lambda x: math.sqrt(max(1.0 - ratio, 0.0)),
         ratio=ratio,
+        select=select,
     )
 
 
@@ -74,12 +126,29 @@ def make_blocktopk(ratio: float, block: int = 2048) -> Compressor:
             jnp.arange(nb)[:, None], idx].set(kept)
         return out.reshape(-1)[:d].reshape(x.shape)
 
+    def select(x, rng=None):
+        flat = x.reshape(-1)
+        d = flat.size
+        bs, nb = block_layout(d, block)
+        xb = jnp.pad(flat, (0, nb * bs - d)).reshape(nb, bs)
+        k = max(1, int(round(ratio * bs)))
+        if k == 1:
+            kept, idx = _argmax_select(xb)           # (nb,), (nb,)
+            kept, idx = kept[:, None], idx[:, None]
+        else:
+            _, idx = lax.top_k(jnp.abs(xb), k)       # (nb, k)
+            kept = jnp.take_along_axis(xb, idx, axis=1)
+        gidx = idx.astype(jnp.int32) + (jnp.arange(nb, dtype=jnp.int32)
+                                        * bs)[:, None]
+        return Selection(vals=kept.reshape(-1), idx=gidx.reshape(-1))
+
     return Compressor(
         name=f"blocktopk_{ratio:g}",
         compress=compress,
         bits_per_message=lambda d: 64 * max(1, int(round(ratio * d))),
         q_bound=lambda x: math.sqrt(max(1.0 - ratio, 0.0)),
         ratio=ratio,
+        select=select,
     )
 
 

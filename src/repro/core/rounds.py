@@ -21,8 +21,9 @@ from repro.core.mesh import (FedMeshState, _sharded_server_update,  # noqa: F401
                              state_shard_axes, state_shard_dim)
 from repro.core.sim import FedSim, SimState, _CoreState  # noqa: F401
 from repro.core.stages import (agg_dense, client_uplink,  # noqa: F401
-                               gamma_diagnostic, mesh_uplink,
-                               packed_sign_leaf, server_downlink,
+                               client_uplink_sparse, gamma_diagnostic,
+                               mesh_uplink, packed_sign_leaf,
+                               server_aggregate_sparse, server_downlink,
                                sparse_topk_leaf)
 
 # pre-split private aliases, kept for callers that reached into the monolith

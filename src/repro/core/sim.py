@@ -22,8 +22,9 @@ from repro.core.compressors import Compressor, make_compressor
 from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
                               run_local_steps)
 from repro.core.server_opt import init_server_state, server_update
-from repro.core.stages import (client_uplink, gamma_diagnostic,
-                               server_downlink)
+from repro.core.stages import (client_uplink, client_uplink_sparse,
+                               ef_update_sparse, gamma_diagnostic,
+                               server_aggregate_sparse, server_downlink)
 
 
 class SimState(NamedTuple):
@@ -69,6 +70,13 @@ class FedSim:
     simulation is exact w.r.t. what the wire actually carried. Round
     metrics then include measured ``wire_bytes`` and simulated
     ``round_time_s`` next to the analytic ``bits``.
+
+    For the top-k family the uplink defaults to the select-once sparse
+    fast path (``fed.sparse_uplink``, DESIGN.md §3): the compacted
+    ``(vals, idx)`` selection flows from compressor to server aggregate —
+    in wire mode via the codec's bit-identical ``roundtrip_selection``
+    shortcut, so the round never re-runs ``lax.top_k`` or materializes a
+    dense per-client hat.
     """
 
     def __init__(self, loss_fn: Callable, fed: FedConfig,
@@ -81,6 +89,16 @@ class FedSim:
             compressor = make_compressor(fed.compressor, fed.compress_ratio,
                                          fed.wire_block)
         self.comp = compressor if fed.algorithm == "fedcams" else None
+        # select-once sparse uplink (DESIGN.md §3): auto-on whenever the
+        # compressor has a compacted (vals, idx) form, forced by the knob
+        self.sparse = (self.comp is not None
+                       and self.comp.select is not None
+                       if fed.sparse_uplink is None
+                       else bool(fed.sparse_uplink))
+        if self.sparse and (self.comp is None or self.comp.select is None):
+            raise ValueError(
+                "sparse_uplink=True needs a compressor with a .select "
+                "(topk/blocktopk family); this one has none")
         n_round = fed.participating or fed.num_clients
         if fed.client_chunk and 0 < fed.client_chunk < n_round \
                 and n_round % fed.client_chunk:
@@ -219,15 +237,8 @@ class FedSim:
         return run_local_steps(self.rule, grad_fn, params, batches, eta_l,
                                k_i=k_i, unroll=min(k, 8))
 
-    def _clients_block(self, start, flat0, batches, errs, pos, rng, eta_l,
-                       k_blk=None):
-        """Local training + uplink compression for a block of clients.
-
-        ``batches``: (c, K, ...) pytree; ``errs``: (c, d) EF errors (ignored
-        when no compressor); ``pos``: (c,) global positions in the round
-        (the per-client RNG stream); ``k_blk``: (c,) heterogeneous step
-        counts or None. Returns (hats, new_errs, delta, losses)."""
-        d = flat0.size
+    def _train_block(self, start, flat0, batches, rng, eta_l, k_blk=None):
+        """Local training for a block of clients → ((c, d) deltas, losses)."""
         if k_blk is None:
             local, losses = jax.vmap(
                 lambda b: self._local_train(start, b, eta_l))(batches)
@@ -236,9 +247,40 @@ class FedSim:
                 lambda b, ki: self._local_train(start, b, eta_l, ki))(
                     batches, k_blk)
         delta = jax.vmap(lambda p: ravel_pytree(p)[0])(local) - flat0[None, :]
-        hats, new_errs = client_uplink(self.comp, self.codec, d, rng,
-                                       delta, errs, pos)
+        return delta, losses
+
+    def _clients_block(self, start, flat0, batches, errs, pos, rng, eta_l,
+                       k_blk=None):
+        """Local training + uplink compression for a block of clients.
+
+        ``batches``: (c, K, ...) pytree; ``errs``: (c, d) EF errors (ignored
+        when no compressor); ``pos``: (c,) global positions in the round
+        (the per-client RNG stream); ``k_blk``: (c,) heterogeneous step
+        counts or None. Returns (hats, new_errs, delta, losses)."""
+        delta, losses = self._train_block(start, flat0, batches, rng, eta_l,
+                                          k_blk)
+        hats, new_errs = client_uplink(self.comp, self.codec, flat0.size,
+                                       rng, delta, errs, pos)
         return hats, new_errs, delta, losses
+
+    def _sparse_uplink_block(self, errors, block_idx, start, flat0, batches,
+                             pos, rng, eta_l, k_blk=None):
+        """Train + select-once uplink for a block of clients, updating the
+        (m, d) EF buffer in place (DESIGN.md §3): the buffer rows gain the
+        deltas (they then hold the EF totals), the compacted selection is
+        taken from those rows, and only the selected coordinates are
+        rewritten with the post-wire residual — no dense per-client hat or
+        error rebuild. Returns (errors, rx_vals, idx, tot_rows, delta,
+        losses); ``tot_rows`` feeds the γ diagnostic and is dead code
+        (eliminated by XLA) when ``track_gamma`` is off."""
+        delta, losses = self._train_block(start, flat0, batches, rng, eta_l,
+                                          k_blk)
+        errors = errors.at[block_idx].add(delta)
+        tot_rows = errors[block_idx]
+        sel_vals, idx, rx_vals = client_uplink_sparse(
+            self.comp, self.codec, flat0.size, rng, tot_rows, pos)
+        errors = ef_update_sparse(errors, block_idx, idx, sel_vals, rx_vals)
+        return errors, rx_vals, idx, tot_rows, delta, losses
 
     def _round_impl(self, core: _CoreState, client_batches, client_idx, rng,
                     round_idx):
@@ -263,23 +305,34 @@ class FedSim:
             # client_chunk mode: scan the per-client train/compress/encode
             # pipeline over n/cc chunks, gathering/scattering each chunk's
             # EF slice inside the body and accumulating sums — peak
-            # delta/hat/error working memory is (cc, d) instead of (n, d)
+            # delta/hat/error working memory is (cc, d) instead of (n, d).
+            # The sparse fast path accumulates each chunk's (vals, idx)
+            # straight into the aggregate scatter, so the chunked round
+            # never builds a dense hat either.
             shape_c = lambda x: x.reshape((n // cc, cc) + x.shape[1:])
 
             def body(carry, inp):
                 b_c, i_c, p_c = inp
                 errors, s_hat, s_tot, s_delta, s_loss = carry
-                e_c = (errors[i_c] if self.comp is not None
-                       else jnp.zeros((cc, 0), jnp.float32))
                 k_c = None if k_all is None else k_all[p_c]
-                hats, nerrs, delta, losses = self._clients_block(
-                    start, flat0, b_c, e_c, p_c, rng, eta_l, k_c)
-                s_hat = s_hat + jnp.sum(hats, axis=0)
+                if self.sparse:
+                    errors, vals, sidx, tot_c, delta, losses = \
+                        self._sparse_uplink_block(
+                            errors, i_c, start, flat0, b_c, p_c, rng,
+                            eta_l, k_c)
+                    s_hat = s_hat.at[sidx.reshape(-1)].add(vals.reshape(-1))
+                    s_tot = s_tot + jnp.sum(tot_c, axis=0)
+                else:
+                    e_c = (errors[i_c] if self.comp is not None
+                           else jnp.zeros((cc, 0), jnp.float32))
+                    hats, nerrs, delta, losses = self._clients_block(
+                        start, flat0, b_c, e_c, p_c, rng, eta_l, k_c)
+                    s_hat = s_hat + jnp.sum(hats, axis=0)
+                    if self.comp is not None:
+                        s_tot = s_tot + jnp.sum(delta + e_c, axis=0)
+                        errors = errors.at[i_c].set(nerrs)
                 s_delta = s_delta + jnp.sum(delta, axis=0)
                 s_loss = s_loss + jnp.sum(losses)
-                if self.comp is not None:
-                    s_tot = s_tot + jnp.sum(delta + e_c, axis=0)
-                    errors = errors.at[i_c].set(nerrs)
                 return (errors, s_hat, s_tot, s_delta, s_loss), None
 
             carry0 = (core.errors, jnp.zeros(d),
@@ -291,6 +344,15 @@ class FedSim:
                  shape_c(client_idx), shape_c(pos)))
             hats_mean, loss = s_hat / n, s_loss / n
             mean_tot, mean_delta = s_tot / n, s_delta / n
+        elif self.sparse:
+            errors, vals, sidx, tot_rows, delta, losses = \
+                self._sparse_uplink_block(core.errors, client_idx, start,
+                                          flat0, client_batches, pos, rng,
+                                          eta_l, k_all)
+            hats_mean = server_aggregate_sparse(vals, sidx, d, n)
+            loss = jnp.mean(losses)
+            mean_tot = jnp.mean(tot_rows, axis=0)
+            mean_delta = jnp.mean(delta, axis=0)
         else:
             errs = (core.errors[client_idx] if self.comp is not None
                     else jnp.zeros((n, 0), jnp.float32))
@@ -306,7 +368,10 @@ class FedSim:
             mean_delta = jnp.mean(delta, axis=0)
 
         agg = hats_mean
-        gamma = gamma_diagnostic(self.comp, rng, mean_tot, agg, mean_delta)
+        # mean_tot/mean_delta feed only the diagnostic: with track_gamma
+        # off, XLA dead-code-eliminates their (n, d) reductions entirely
+        gamma = (gamma_diagnostic(self.comp, rng, mean_tot, agg, mean_delta)
+                 if fed.track_gamma else jnp.zeros(()))
 
         # server update on the flat vector
         xflat, _ = ravel_pytree(core.params)

@@ -11,6 +11,12 @@ Simulation-side stages (flat per-client vectors):
 
 * :func:`client_uplink`   — EF + compressor and/or wire codec for a block
   of client deltas; EF always tracks the value the wire actually carried.
+* :func:`client_uplink_sparse` / :func:`server_aggregate_sparse` — the
+  select-once sparse fast path (DESIGN.md §3): the compressor's
+  :class:`~repro.core.compressors.Selection` stays a compacted
+  ``(vals, idx)`` pair from client to server, the aggregate is an
+  O(n·k + d) segment scatter instead of a dense (n, d) mean, and no dense
+  per-client hat is ever materialized.
 * :func:`server_downlink` — the beyond-paper two-way (server→client)
   EF-compressed downlink (paper appendix D).
 * :func:`gamma_diagnostic` — the Assumption 4.17 γ measurement (Fig. 6).
@@ -61,8 +67,11 @@ def client_uplink(comp: Optional[Compressor], codec, d: int, rng,
     if comp is not None:
         if codec is not None:
             def one(dd, ee, i):
+                # the per-client key reaches the codec so a stochastic
+                # wire format (randomized rounding) can't desync streams
                 tot = dd + ee
-                hat = codec.decode(codec.encode(tot), d)
+                hat = codec.decode(
+                    codec.encode(tot, jax.random.fold_in(rng, i)), d)
                 return hat, tot - hat
         else:
             def one(dd, ee, i):
@@ -73,6 +82,60 @@ def client_uplink(comp: Optional[Compressor], codec, d: int, rng,
     else:
         hats = delta
     return hats, errs
+
+
+def client_uplink_sparse(comp: Compressor, codec, d: int, rng, tot, pos):
+    """The select-once fast path for a block of clients (DESIGN.md §3).
+
+    ``tot``: (c, d) EF totals (delta + carried error). The selection
+    happens ONCE (``comp.select``) and the server-bound message stays the
+    compacted ``(vals, idx)`` pair: no dense hat is built, and in wire mode
+    the codec's ``roundtrip_selection`` narrows the values exactly the way
+    the packed bytes would (bit-identical to the full encode→decode,
+    property-tested) instead of re-running ``lax.top_k`` over the dense
+    vector.
+
+    Returns ``(sel_vals, idx, rx_vals)``, each (c, k): the selected values,
+    their flat positions, and the values as the server receives them
+    (``rx_vals == sel_vals`` on a float32 wire). The caller finishes error
+    feedback with :func:`ef_update_sparse` — only selected coordinates
+    change the error, so the EF write is an O(c·k) scatter, not a dense
+    (c, d) rebuild.
+    """
+    def one(t, i):
+        sel = comp.select(t, jax.random.fold_in(rng, i))
+        rx = (codec.roundtrip_selection(sel, d) if codec is not None
+              else sel)
+        return sel.vals, sel.idx, rx.vals
+    return jax.vmap(one)(tot, pos)
+
+
+def ef_update_sparse(errors, rows, idx, sel_vals, rx_vals):
+    """Finish sparse-path error feedback in place on the (m, d) buffer.
+
+    ``errors`` rows already hold this round's totals (``err += delta``);
+    only the selected coordinates change: they become ``sel_vals −
+    rx_vals`` — exact zeros on a float32 wire (tot − tot), the quantization
+    residual on narrowed wires — which equals the dense path's
+    ``tot − hat`` coordinate for coordinate. ``rows``: (c,) client rows;
+    ``idx``/``sel_vals``/``rx_vals``: (c, k). Padded-block positions
+    (``idx >= d``, blockwise compressors) are dropped by the scatter,
+    mirroring the dense pad-and-slice."""
+    r = jnp.broadcast_to(rows[:, None], idx.shape)
+    return errors.at[r, idx].set(sel_vals - rx_vals)
+
+
+def server_aggregate_sparse(vals, idx, d: int, n: int):
+    """Mean of n sparse client messages as one segment scatter-add over the
+    (n·k) received entries — O(n·k + d) instead of the dense (n, d) mean.
+
+    Collisions (a coordinate selected by several clients) accumulate in
+    client order; floating-point reassociation against the dense mean's
+    reduce is at most 1 ulp per colliding coordinate (see
+    tests/test_sparse_uplink.py). Out-of-range padded indices are dropped.
+    """
+    return jnp.zeros(d, jnp.float32).at[idx.reshape(-1)].add(
+        vals.reshape(-1)) / n
 
 
 def server_downlink(fed: FedConfig, comp: Optional[Compressor], codec,

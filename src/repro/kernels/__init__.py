@@ -8,4 +8,4 @@ from repro.kernels.bitpack import (pack_bits, pack_bits_ref,  # noqa: F401
 from repro.kernels.fedams_update import fedams_update  # noqa: F401
 from repro.kernels.ops import KernelImpl  # noqa: F401
 from repro.kernels.sign_ef import sign_ef  # noqa: F401
-from repro.kernels.topk_ef import topk_ef  # noqa: F401
+from repro.kernels.topk_ef import topk_ef, topk_ef_sparse  # noqa: F401

@@ -10,16 +10,19 @@ uses the true element count).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.core.compressors import Compressor
+from repro.core.compressors import Compressor, Selection
 from repro.core.server_opt import ServerState
+from repro.kernels.bitpack import _resolve_interpret
 from repro.kernels.fedams_update import fedams_update as _fedams_update
 from repro.kernels.sign_ef import sign_ef as _sign_ef
 from repro.kernels.topk_ef import topk_ef as _topk_ef
+from repro.kernels.topk_ef import topk_ef_sparse as _topk_ef_sparse
 
 
 def _pad_flat(x, block):
@@ -33,8 +36,17 @@ def _pad_flat(x, block):
 
 @dataclass(frozen=True)
 class KernelImpl:
+    """``interpret=None`` (the default) resolves per backend exactly like
+    ``kernels.bitpack``: compiled Pallas on TPU, interpreter elsewhere —
+    so constructing a ``KernelImpl`` on TPU runs the real kernels without
+    the caller having to know about interpret mode."""
+
     block: int = 2048
-    interpret: bool = True
+    interpret: Optional[bool] = None
+
+    @property
+    def _interp(self) -> bool:
+        return _resolve_interpret(self.interpret)
 
     # -- error-feedback compression ------------------------------------
     def ef_compress_leaf(self, comp_name: str, ratio: float, x, err):
@@ -45,13 +57,13 @@ class KernelImpl:
             eflat, _ = _pad_flat(err, bs)
             k = max(1, int(round(ratio * bs)))
             hat, ne = _topk_ef(flat, eflat, k=k, block=bs,
-                                 interpret=self.interpret)
+                                 interpret=self._interp)
         elif comp_name in ("sign", "packedsign"):
             flat, n = _pad_flat(x, self.block)
             eflat, _ = _pad_flat(err, self.block)
             # scale over the padded vector differs from mean over n; rescale
             hat, ne = _sign_ef(flat, eflat, block=self.block,
-                                 interpret=self.interpret)
+                                 interpret=self._interp)
             if flat.size != n:
                 hat = hat * (flat.size / n)
                 ne = (flat + eflat) - hat
@@ -60,6 +72,29 @@ class KernelImpl:
         hat = hat[:n].reshape(x.shape)
         ne = ne[:n].reshape(err.shape)
         return hat, ne
+
+    def topk_select_leaf(self, ratio: float, x, err):
+        """Fused EF + compacted selection for one leaf (the sparse-uplink
+        kernel form): returns ``(Selection, new_err)`` where the Selection's
+        ``idx`` are flat positions in the zero-padded domain (entries past
+        ``x.size`` carry 0.0, matching
+        :meth:`repro.core.compressors.Compressor.select`'s padded-block
+        convention) and ``new_err`` has ``x``'s shape.
+
+        This is the TPU entry point for the select-once pipeline
+        (DESIGN.md §3): one HBM pass per tile emits the compacted block.
+        The sim backend uses the jnp ``Compressor.select`` (compiled XLA
+        beats interpret-mode Pallas off-TPU); routing ``mesh_uplink``'s
+        sparse aggregation through this leaf is a ROADMAP item."""
+        from repro.core.compressors import block_layout
+        bs, _ = block_layout(x.size, self.block)
+        flat, n = _pad_flat(x, bs)
+        eflat, _ = _pad_flat(err, bs)
+        k = max(1, int(round(ratio * bs)))
+        vals, idx, ne = _topk_ef_sparse(flat, eflat, k=k, block=bs,
+                                        interpret=self._interp)
+        sel = Selection(vals=vals.reshape(-1), idx=idx.reshape(-1))
+        return sel, ne[:n].reshape(err.shape)
 
     def ef_compress_tree(self, comp: Compressor, delta, err, mask):
         name = comp.name.split("_")[0]
@@ -95,7 +130,7 @@ class KernelImpl:
             x2, m2, v2, vh2 = _fedams_update(
                 xf, mf, vf, vhf, df, eta=fed.eta, beta1=fed.beta1,
                 beta2=fed.beta2, eps=fed.eps, option=fed.option,
-                block=self.block, interpret=self.interpret)
+                block=self.block, interpret=self._interp)
             xs.append(x2[:n].reshape(x.shape).astype(x.dtype))
             ms.append(m2[:n].reshape(x.shape))
             vs.append(v2[:n].reshape(x.shape))

@@ -7,6 +7,20 @@ inside the tile (one pass + an in-register top_k), and writes both the
 compressed tile and the residual error in the same pass — the error-feedback
 update is fused, so the delta is read exactly once.
 
+Two output layouts share the selection logic:
+
+* :func:`topk_ef` — dense (hat, new_err), the historical contract used by
+  ``KernelImpl.ef_compress_tree`` on the mesh path.
+* :func:`topk_ef_sparse` — the compacted ``(vals, idx)`` block the sparse
+  uplink keeps end-to-end (DESIGN.md §3), emitted directly from the same
+  single HBM pass (plus ``new_err``); ``idx`` are global flat positions.
+
+Selection keeps EXACTLY k entries per block with ``lax.top_k``'s
+tie-breaking (lowest index first) — a pure threshold ``|x| >= kth`` keeps
+more than k on ties, which breaks the wire format's fixed (vals, idx)
+buffer sizes and the ``bits_per_message`` accounting
+(tests/test_kernels.py ties regression).
+
 The per-block contraction ‖C(x_b)−x_b‖² ≤ (1−k'/B)‖x_b‖² preserves the
 paper's Assumption 4.14 with the same q = sqrt(1−r).
 """
@@ -22,15 +36,33 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = 2048
 
 
+def _select_block(tot, k: int):
+    """Exact-k selection inside one VMEM tile: (vals, idx) in descending
+    |value| order plus the membership mask, matching ``lax.top_k`` ties."""
+    _, idx = lax.top_k(jnp.abs(tot), k)
+    vals = jnp.take(tot, idx)
+    # membership mask via a (k, block) comparison table — stays on the VPU
+    # (no in-kernel scatter); 2D iota for TPU compatibility
+    pos = lax.broadcasted_iota(jnp.int32, (1, tot.shape[0]), 1)
+    keep = jnp.any(idx[:, None] == pos, axis=0)
+    return vals, idx, keep
+
+
 def _topk_ef_kernel(x_ref, e_ref, hat_ref, err_ref, *, k: int):
     tot = x_ref[...] + e_ref[...]
-    absx = jnp.abs(tot)
-    # k-th largest |value| in this VMEM tile -> keep threshold
-    kth = lax.top_k(absx, k)[0][-1]
-    keep = absx >= kth
+    _, _, keep = _select_block(tot, k)
     hat = jnp.where(keep, tot, 0.0)
     hat_ref[...] = hat
     err_ref[...] = tot - hat
+
+
+def _topk_ef_sparse_kernel(x_ref, e_ref, vals_ref, idx_ref, err_ref, *,
+                           k: int, block: int):
+    tot = x_ref[...] + e_ref[...]
+    vals, idx, keep = _select_block(tot, k)
+    vals_ref[...] = vals[None, :]
+    idx_ref[...] = (idx + pl.program_id(0) * block)[None, :]  # global flat
+    err_ref[...] = jnp.where(keep, 0.0, tot)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
@@ -49,6 +81,37 @@ def topk_ef(x, err, *, k: int, block: int = DEFAULT_BLOCK,
         grid=grid,
         in_specs=[spec, spec],
         out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, err)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_ef_sparse(x, err, *, k: int, block: int = DEFAULT_BLOCK,
+                   interpret: bool = True):
+    """x, err: (N,) fp32 with N % block == 0. One HBM pass per tile
+    emitting the compacted selection directly:
+
+    Returns ``(vals, idx, new_err)`` with ``vals``/``idx`` shaped
+    (N // block, k) — per-block kept values and their GLOBAL flat
+    positions, ``lax.top_k`` order — and ``new_err`` (N,) the fused EF
+    residual (``x + err`` with the selected entries zeroed). The dense
+    equivalent ``zeros(N).at[idx].set(vals)`` equals :func:`topk_ef`'s hat
+    bit-for-bit (tests/test_kernels.py)."""
+    assert x.ndim == 1 and x.shape == err.shape
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    sel_spec = pl.BlockSpec((1, k), lambda i: (i, 0))
+    out_shape = (jax.ShapeDtypeStruct((nb, k), x.dtype),
+                 jax.ShapeDtypeStruct((nb, k), jnp.int32),
+                 jax.ShapeDtypeStruct(x.shape, x.dtype))
+    return pl.pallas_call(
+        functools.partial(_topk_ef_sparse_kernel, k=k, block=block),
+        grid=(nb,),
+        in_specs=[spec, spec],
+        out_specs=[sel_spec, sel_spec, spec],
         out_shape=out_shape,
         interpret=interpret,
     )(x, err)

@@ -10,12 +10,12 @@ try:
 except ModuleNotFoundError:  # see tests/hypothesis_fallback.py
     from hypothesis_fallback import given, settings, st
 
-from repro.core.compressors import make_compressor
+from repro.core.compressors import make_compressor, selection_to_dense
 from repro.kernels import ref
 from repro.kernels.fedams_update import fedams_update
 from repro.kernels.ops import KernelImpl
 from repro.kernels.sign_ef import sign_ef
-from repro.kernels.topk_ef import topk_ef
+from repro.kernels.topk_ef import topk_ef, topk_ef_sparse
 
 settings.register_profile("ci", max_examples=15, deadline=None)
 settings.load_profile("ci")
@@ -90,6 +90,76 @@ def test_fedams_kernel_vhat_monotone(seed):
         assert (np.asarray(vh2) >= np.asarray(vh) - 1e-12).all()
         assert (np.asarray(vh2) >= 1e-3 - 1e-12).all()
         vh = vh2
+
+
+def test_topk_ef_keeps_exactly_k_on_ties():
+    """Ties regression: a tile of equal |values| must keep EXACTLY k
+    entries (lowest indices first, lax.top_k order) — the old threshold
+    formulation (|x| >= kth) kept every tied entry, breaking the wire
+    format's fixed (vals, idx) sizes and the bits_per_message accounting."""
+    n, block, k = 4096, 2048, 7
+    x = jnp.ones(n, jnp.float32)
+    e = jnp.zeros(n, jnp.float32)
+    hat, ne = topk_ef(x, e, k=k, block=block)
+    hat = np.asarray(hat).reshape(-1, block)
+    for b in range(hat.shape[0]):
+        kept = np.flatnonzero(hat[b])
+        assert kept.tolist() == list(range(k)), (b, kept)
+    # mixed signs and partial ties
+    x2 = jnp.asarray(np.tile([2.0, -2.0, 1.0, -1.0], block // 4), jnp.float32)
+    h2, _ = topk_ef(x2, jnp.zeros(block, jnp.float32), k=3, block=block)
+    assert int((np.asarray(h2) != 0).sum()) == 3
+    assert np.flatnonzero(np.asarray(h2)).tolist() == [0, 1, 4]
+    # matches the dense blocktopk compressor bit for bit on ties
+    comp = make_compressor("blocktopk", k / block, block)
+    assert np.array_equal(np.asarray(comp.compress(x)), np.asarray(hat.reshape(-1)))
+
+
+@pytest.mark.parametrize("n,block,k", [(256, 64, 4), (4096, 2048, 32),
+                                       (8192, 1024, 1)])
+def test_topk_ef_sparse_matches_dense_kernel(n, block, k):
+    """The compacted (vals, idx) output scatters back to exactly the dense
+    kernel's hat, the fused new_err is identical, and idx are global."""
+    x, e = _pair(7, n)
+    hat, ne = topk_ef(x, e, k=k, block=block)
+    vals, idx, ne2 = topk_ef_sparse(x, e, k=k, block=block)
+    assert vals.shape == idx.shape == (n // block, k)
+    rec = jnp.zeros(n, jnp.float32).at[idx.reshape(-1)].set(vals.reshape(-1))
+    assert np.array_equal(np.asarray(rec), np.asarray(hat))
+    assert np.array_equal(np.asarray(ne2), np.asarray(ne))
+    # per-block indices live in that block's global range
+    lo = np.arange(n // block)[:, None] * block
+    assert ((np.asarray(idx) >= lo) & (np.asarray(idx) < lo + block)).all()
+
+
+def test_kernel_impl_topk_select_leaf_matches_compressor():
+    """KernelImpl's fused selection agrees with the jnp compressor.select
+    (vals/idx bit-identical incl. padded tails) and its new_err with the
+    dense EF identity."""
+    ki = KernelImpl(block=64)
+    r = np.random.default_rng(9)
+    for n in (64, 100, 300):
+        x = jnp.asarray(r.normal(size=n), jnp.float32)
+        e = jnp.asarray(r.normal(size=n) * 0.2, jnp.float32)
+        sel, ne = ki.topk_select_leaf(1 / 4, x, e)
+        comp = make_compressor("blocktopk", 1 / 4, 64)
+        ref_sel = comp.select(x + e)
+        assert np.array_equal(np.asarray(sel.idx), np.asarray(ref_sel.idx)), n
+        assert np.array_equal(np.asarray(sel.vals), np.asarray(ref_sel.vals))
+        hat = selection_to_dense(sel, n)
+        np.testing.assert_array_equal(np.asarray(ne),
+                                      np.asarray((x + e) - hat))
+
+
+def test_kernel_impl_interpret_resolves_by_backend():
+    """interpret=None resolves like kernels.bitpack: interpreter off-TPU,
+    compiled on TPU; an explicit bool is honored unchanged."""
+    ki = KernelImpl()
+    assert ki.interpret is None
+    expected = jax.default_backend() != "tpu"
+    assert ki._interp is expected
+    assert KernelImpl(interpret=True)._interp is True
+    assert KernelImpl(interpret=False)._interp is False
 
 
 def test_kernel_impl_padding_paths():
