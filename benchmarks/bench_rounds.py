@@ -357,6 +357,103 @@ def measure_compression_bound(rounds: int, reps: int = 3) -> dict:
     }
 
 
+_MESH_AB_CODE = '''
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.configs.base import ModelConfig, FedConfig, TrainConfig
+from repro.core.mesh import (build_fed_round, build_fed_rounds_scan,
+                             fed_batch_defs, fed_state_defs, init_fed_state,
+                             scan_batch_specs)
+from repro.launch.mesh import make_mesh
+from repro.models import params as pdefs
+from repro.models.model import Model
+from repro.sharding.rules import ParallelContext
+
+ROUNDS, REPS = {rounds}, {reps}
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                  dtype="float32")
+mesh = make_mesh((8, 1), ("data", "model"))
+model = Model(cfg, tp=1)
+ctx = ParallelContext(client_axes=("data",), num_clients=8)
+K, GB, S = 1, 8, 16
+rngn = np.random.default_rng(0)
+toks = rngn.integers(0, 64, size=(ROUNDS, K, GB, S)).astype(np.int32)
+batch = {{"tokens": jnp.asarray(toks),
+          "labels": jnp.asarray(np.roll(toks, -1, -1))}}
+seeds = jnp.arange(ROUNDS, dtype=jnp.int32)
+steps, out = {{}}, {{}}
+for agg in ("dense", "sparse"):
+    fed = FedConfig(algorithm="fedcams", num_clients=8, local_steps=K,
+                    compressor="blocktopk", compress_ratio=1 / 64,
+                    aggregation=agg, client_axes=("data",),
+                    eta=0.3, eta_l=0.05, track_gamma=False)
+    train = TrainConfig(global_batch=GB, seq_len=S, remat_policy="none")
+    rnd = build_fed_round(model, fed, train, ctx)
+    sdefs = fed_state_defs(model, fed)
+    ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
+    bsp = jax.tree.map(lambda d: d.spec, fed_batch_defs(model, fed, train),
+                       is_leaf=pdefs.is_def)
+    steps[agg] = (jax.jit(compat.shard_map(
+        build_fed_rounds_scan(rnd), mesh=mesh,
+        in_specs=(ssp, scan_batch_specs(bsp), P(None)),
+        out_specs=(ssp, {{"loss": P(None), "wire_up_bytes": P(None)}})),
+        donate_argnums=(0,)), fed)
+ts = {{"dense": [], "sparse": []}}
+for rep in range(REPS + 1):          # first pair compiles
+    for name, (fn, fed) in steps.items():
+        state = init_fed_state(model, fed, jax.random.PRNGKey(0))
+        t0 = time.perf_counter()
+        state, met = fn(state, batch, seeds)
+        jax.block_until_ready(state.params)
+        ts[name].append(time.perf_counter() - t0)
+        out[name + "_final_loss"] = float(np.asarray(met["loss"])[-1])
+        out[name + "_wire_up_bytes"] = float(
+            np.asarray(met["wire_up_bytes"])[-1])
+for name in ts:
+    out[name + "_rounds_per_s"] = ROUNDS / float(np.min(ts[name][1:]))
+out["speedup_sparse_vs_dense"] = (out["sparse_rounds_per_s"]
+                                  / out["dense_rounds_per_s"])
+out["wire_reduction"] = (out["dense_wire_up_bytes"]
+                         / out["sparse_wire_up_bytes"])
+print(json.dumps(out))
+'''
+
+
+def measure_mesh_sparse_ab(rounds: int, reps: int = 3) -> dict:
+    """Mesh-backend sparse-vs-dense aggregation A/B: the scan-driven mesh
+    round on a forced-8-device subprocess (the bench process itself must
+    keep seeing one device, like the tests — tests/conftest.py note), tiny
+    transformer, blocktopk 1/64, compacted-Selection gather vs dense psum.
+    On this CPU host ``mesh_sparse_impl`` auto-resolves to the jnp
+    ``Compressor.select`` provider (interpret-mode Pallas would measure
+    the interpreter, not the kernel); both providers emit the
+    bit-identical Selection (tests/test_mesh_parity.py), so the payload
+    numbers are provider-independent. CPU-mesh collectives are
+    shared-memory copies, so the rounds/s ratio is NOT the accelerator
+    story — the load-bearing numbers are ``wire_reduction`` (the
+    collective payload ratio, measured by ``mesh_wire_bytes`` == the
+    traced gather operands) and the loss parity between the paths."""
+    import json as _json
+    import os
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = _MESH_AB_CODE.format(rounds=rounds, reps=reps)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    assert r.returncode == 0, r.stderr[-4000:]
+    out = _json.loads(r.stdout.strip().splitlines()[-1])
+    out["config"] = dict(compressor="blocktopk", ratio=1 / 64, clients=8,
+                         rounds=rounds, reps=reps, scan=True)
+    return out
+
+
 def measure_local_rules(rounds: int) -> dict:
     """The local-rule dimension (core/local.py): scan-driver throughput per
     rule on the overhead-bound config. sgd is the pre-split round — its
@@ -435,6 +532,14 @@ def main():
         f"e2e_speedup_vs_dense={cb['e2e']['speedup_sparse_vs_dense']:.2f}x;"
         f"uplink_stage_speedup="
         f"{cb['uplink_stage']['speedup_sparse_vs_dense']:.2f}x"))
+    ab = measure_mesh_sparse_ab(8 if QUICK else 24, reps=2 if QUICK else 4)
+    payload["mesh_sparse_ab"] = ab
+    rows.append(csv_row(
+        "rounds_mesh_sparse_ab",
+        1e6 * (1 / ab["sparse_rounds_per_s"]),
+        f"rounds_per_s={ab['sparse_rounds_per_s']:.1f};"
+        f"speedup_vs_dense={ab['speedup_sparse_vs_dense']:.2f}x;"
+        f"wire_reduction={ab['wire_reduction']:.1f}x"))
     update_bench_json(payload)
     return rows
 

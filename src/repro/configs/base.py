@@ -217,6 +217,7 @@ FED_ALGORITHMS = ("fedavg", "fedadagrad", "fedadam", "fedyogi",
 FED_COMPRESSORS = ("topk", "blocktopk", "sign", "packedsign", "randk",
                    "int8", "none", "identity")
 FED_AGGREGATIONS = ("dense", "sparse")
+FED_MESH_SPARSE_IMPLS = ("auto", "kernel", "jnp")
 FED_LOCAL_OPTS = ("sgd", "sgdm", "prox")
 
 
@@ -260,6 +261,16 @@ class FedConfig:
     # float reassociation on coordinates several clients selected.
     sparse_uplink: Optional[bool] = None
     aggregation: str = "dense"     # dense | sparse  (see DESIGN.md §3)
+    # Mesh sparse aggregation: who computes the per-leaf blockwise top-k
+    # selection the client-axis all_gather carries (DESIGN.md §3).
+    # "auto" = the fused Pallas kernel (kernels/topk_ef.py::topk_ef_sparse,
+    # one HBM pass emitting the compacted (vals, idx) block + the EF
+    # residual) when a KernelImpl is supplied and compiles for the backend
+    # (TPU), the jnp Compressor.select path otherwise; "kernel"/"jnp" force
+    # one side (forcing "kernel" off-TPU runs the Pallas interpreter —
+    # bit-identical, test-only speed). Selection and EF are bit-identical
+    # across impls (tests/test_kernels.py, tests/test_mesh_parity.py).
+    mesh_sparse_impl: str = "auto"  # auto | kernel | jnp
     # Compute the per-round Assumption 4.17 γ diagnostic (paper Fig. 6).
     # It costs an extra dense compression of the mean total per round;
     # production-style perf runs turn it off and the history reports
@@ -296,6 +307,8 @@ class FedConfig:
         check("option", self.option, (1, 2))
         check("compressor", self.compressor, FED_COMPRESSORS)
         check("aggregation", self.aggregation, FED_AGGREGATIONS)
+        check("mesh_sparse_impl", self.mesh_sparse_impl,
+              FED_MESH_SPARSE_IMPLS)
         check("local_opt", self.local_opt, FED_LOCAL_OPTS)
         check("wire_pack_impl", self.wire_pack_impl, ("jnp", "pallas"))
         check("sparse_uplink", self.sparse_uplink, (None, True, False))

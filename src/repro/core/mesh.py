@@ -26,7 +26,8 @@ from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
                               run_local_steps)
 from repro.core.sampling import participation_mask
 from repro.core.server_opt import ServerState, server_update
-from repro.core.stages import mesh_uplink
+from repro.core.stages import (mesh_agg_strategy, mesh_uplink,
+                               resolve_mesh_sparse_impl)
 from repro.models import params as pdefs
 from repro.sharding.rules import ParallelContext
 
@@ -159,35 +160,46 @@ def _sharded_server_update(fed: FedConfig, st: ServerState, params, agg,
 # -- the round ---------------------------------------------------------------
 
 
+def leaf_wire_bytes(fed: FedConfig, dl: int, block: int = 2048) -> int:
+    """Per-client collective payload bytes for ONE leaf of ``dl`` local
+    elements, resolved through the same :func:`~repro.core.stages.
+    mesh_agg_strategy` the round executes — so every fallback (non-fedcams,
+    sparse aggregation with a compressor that has no compacted form) is
+    billed as the dense psum it actually runs:
+
+    * ``sparse_topk``  — the gathered Selection: an int32 global index +
+      fp32 value per kept coordinate (8 bytes each), ``nb·kb`` entries in
+      the leaf's padded block layout — exactly the two arrays
+      ``stages.sparse_topk_leaf`` all_gathers (regression-tested against
+      the traced collective operands in tests/test_mesh_parity.py).
+    * ``packed_sign``  — the 8→1 packed sign bits + one fp32 scale.
+    * ``dense``        — ``delta_dtype`` words for every element.
+    """
+    from repro.core.compressors import block_layout
+    strategy = mesh_agg_strategy(fed)
+    if strategy == "sparse_topk":
+        bs, nb = block_layout(dl, block)
+        kb = max(1, int(round(fed.compress_ratio * bs)))
+        return nb * kb * 8                # int32 index + fp32 value
+    if strategy == "packed_sign":
+        return (dl + 7) // 8 + 4          # 1 bit/coord + fp32 scale
+    return dl * jnp.dtype(fed.delta_dtype).itemsize
+
+
 def mesh_wire_bytes(fed: FedConfig, delta_tree, block: int = 2048,
                     tp: int = 1) -> int:
     """Measured per-client contribution bytes for one mesh round's
-    client-axis collective, sized to what the aggregation paths *actually*
-    move per leaf: ``stages.sparse_topk_leaf`` gathers uint32 global indices
-    + fp32 values for the kept coordinates (8 bytes each),
-    ``stages.packed_sign_leaf`` gathers the 8→1 packed sign bits + one fp32
-    scale, and the dense psum carries ``delta_dtype`` words. (Collectives
-    carry no per-message header, unlike the comm.wire point-to-point
-    codecs.)
+    client-axis collective: the sum of :func:`leaf_wire_bytes` over the
+    local shard tree. (Collectives carry no per-message header, unlike the
+    comm.wire point-to-point codecs.)
 
     ``delta_tree`` holds this device's *local* shards; every one of the
     client's ``tp`` model-parallel devices pushes its own payload into the
     client-axis collective (model-replicated leaves included — each device
     sends its copy), so the client's wire traffic is the local total × tp.
     """
-    from repro.core.compressors import block_layout
-    sparse = fed.algorithm == "fedcams" and fed.aggregation == "sparse"
-    total = 0
-    for leaf in jax.tree.leaves(delta_tree):
-        dl = int(np.prod(leaf.shape))
-        if sparse and fed.compressor in ("topk", "blocktopk"):
-            bs, nb = block_layout(dl, block)
-            kb = max(1, int(round(fed.compress_ratio * bs)))
-            total += nb * kb * 8          # uint32 index + fp32 value
-        elif sparse and fed.compressor == "packedsign":
-            total += (dl + 7) // 8 + 4    # 1 bit/coord + fp32 scale
-        else:
-            total += dl * jnp.dtype(fed.delta_dtype).itemsize
+    total = sum(leaf_wire_bytes(fed, int(np.prod(leaf.shape)), block)
+                for leaf in jax.tree.leaves(delta_tree))
     return total * max(tp, 1)
 
 
@@ -202,7 +214,17 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
     # (DESIGN.md §3; contraction bound unchanged). Exact global top-k lives
     # in the FedSim simulation path.
     comp_name = "blocktopk" if fed.compressor == "topk" else fed.compressor
-    comp = (make_compressor(comp_name, fed.compress_ratio)
+    # One block layout for the whole sparse path: when the kernel provider
+    # will select, the jnp compressor, the kernel, and the wire metric all
+    # use the kernel's block — layout mismatches would silently break the
+    # kernel/jnp bit-identity and the metric==payload invariant.
+    sparse_block = 2048
+    if mesh_agg_strategy(fed) == "sparse_topk":
+        # resolve at build time, not inside the traced round: 'kernel'
+        # without a KernelImpl has nothing to select with
+        if resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel":
+            sparse_block = kernel_impl.block
+    comp = (make_compressor(comp_name, fed.compress_ratio, sparse_block)
             if fed.algorithm == "fedcams" else None)
     rule = make_local_update(fed)
     m_clients = fed.num_clients
@@ -290,7 +312,8 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
         # contribute masked zeros that still occupy wire — so the factor is
         # m, not n_part.
         wire = jnp.float32(
-            m_clients * mesh_wire_bytes(fed, delta, tp=ctx.tp))
+            m_clients * mesh_wire_bytes(fed, delta, block=sparse_block,
+                                        tp=ctx.tp))
         return new_state, {"loss": loss, "wire_up_bytes": wire}
 
     return fed_round

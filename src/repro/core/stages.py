@@ -23,10 +23,18 @@ Simulation-side stages (flat per-client vectors):
 
 Mesh-side stages (per-device pytree shards + client-axis collectives):
 
-* :func:`agg_dense`        — paper-faithful dense psum aggregation.
-* :func:`sparse_topk_leaf` — wire-size-true blockwise top-k all_gather.
-* :func:`packed_sign_leaf` — 1-bit/coordinate packed-sign all_gather.
-* :func:`mesh_uplink`      — the full uplink: aggregation-strategy
+* :func:`agg_dense`         — paper-faithful dense psum aggregation.
+* :func:`mesh_agg_strategy` — single resolver for which client-axis
+  collective a config actually runs (mesh_uplink and the
+  ``mesh_wire_bytes`` metric share it, so the byte accounting can never
+  drift from the executed path).
+* :func:`topk_select_tree`  — per-leaf select-once ``Selection`` + fused
+  O(k)-scatter EF (the jnp sibling of
+  ``KernelImpl.topk_select_tree``).
+* :func:`sparse_topk_leaf`  — wire-size-true all_gather of one leaf's
+  compacted ``(vals, idx)`` Selection + server scatter-add.
+* :func:`packed_sign_leaf`  — 1-bit/coordinate packed-sign all_gather.
+* :func:`mesh_uplink`       — the full uplink: aggregation-strategy
   selection + masked EF + delta-dtype narrowing.
 """
 from __future__ import annotations
@@ -35,10 +43,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.configs.base import FedConfig
-from repro.core.compressors import Compressor
+from repro.core.compressors import Compressor, Selection
 from repro.core.error_feedback import ef_compress, ef_compress_masked
 from repro.sharding.rules import ParallelContext
 
@@ -185,33 +192,111 @@ def agg_dense(hat_tree, my_mask, n_eff, ctx: ParallelContext,
         lambda c: ctx.psum_clients(c).astype(jnp.float32) / n_eff, contrib)
 
 
-def sparse_topk_leaf(tot, ratio, my_mask, n_eff, ctx: ParallelContext,
-                     block: int = 2048):
-    """Beyond-paper: all_gather (values, indices) of the local blockwise
-    top-k and scatter-add — the wire carries ~2k words instead of d, and the
-    selection is bit-identical to the dense blocktopk path (same
-    ``block_layout``). Returns (aggregated dense leaf, this client's dense
-    hat for error feedback)."""
-    from repro.core.compressors import block_layout
-    flat = tot.reshape(-1)
-    d = flat.size
-    bs, nb = block_layout(d, block)
-    pad = nb * bs - d
-    xb = jnp.pad(flat, (0, pad)).reshape(nb, bs)
-    k = max(1, int(round(ratio * bs)))
-    _, idx = lax.top_k(jnp.abs(xb), k)                       # (nb, k)
-    vals = jnp.take_along_axis(xb, idx, axis=1)
-    gidx = (idx + (jnp.arange(nb) * bs)[:, None]).reshape(-1)
-    kept = vals.reshape(-1)
-    hat = jnp.zeros(nb * bs, flat.dtype).at[gidx].set(kept)[:d]
-    masked = kept * (my_mask > 0)
-    g_vals = ctx.all_gather_clients(masked[None], axis=0).reshape(-1)
-    g_idx = ctx.all_gather_clients(gidx[None], axis=0).reshape(-1)
+def mesh_agg_strategy(fed: FedConfig) -> str:
+    """Which client-axis collective the mesh round actually runs for this
+    config: ``"sparse_topk"`` (compacted Selection all_gather),
+    ``"packed_sign"`` (1-bit packed gather), or ``"dense"`` (psum —
+    including every fallback: non-fedcams algorithms, and sparse
+    aggregation requested for a compressor with no compacted form).
+    ``mesh_uplink`` and ``mesh_wire_bytes`` both resolve through here, so
+    the wire accounting reports the path that executes, never the one the
+    config merely asked for."""
+    if fed.algorithm != "fedcams" or fed.aggregation != "sparse":
+        return "dense"
+    if fed.compressor in ("topk", "blocktopk"):
+        return "sparse_topk"
+    if fed.compressor == "packedsign":
+        return "packed_sign"
+    return "dense"
+
+
+def resolve_mesh_sparse_impl(fed: FedConfig, kernel_impl) -> str:
+    """``fed.mesh_sparse_impl`` → the selection provider that will run:
+    ``"kernel"`` (fused Pallas ``topk_ef_sparse`` via
+    ``KernelImpl.topk_select_tree``) or ``"jnp"`` (``Compressor.select``).
+    ``auto`` picks the kernel only when it would compile (TPU) — off-TPU
+    the interpreter loses to compiled XLA, so auto falls back to jnp even
+    when a KernelImpl is supplied (it still serves the dense-hat
+    ``ef_compress_tree`` path)."""
+    impl = fed.mesh_sparse_impl
+    if impl == "kernel":
+        if kernel_impl is None:
+            raise ValueError(
+                "FedConfig.mesh_sparse_impl='kernel' but no kernel_impl "
+                "was supplied — pass KernelImpl() to build_fed_round "
+                "(launch/train.py: --use-kernels or --mesh-sparse-impl "
+                "kernel)")
+        return "kernel"
+    if impl == "jnp":
+        return "jnp"
+    return ("kernel" if kernel_impl is not None and kernel_impl.compiled
+            else "jnp")
+
+
+def select_tree(select_leaf, delta, err, mask):
+    """Shared select-once tree plumbing for BOTH selection providers (the
+    jnp :func:`topk_select_tree` and the Pallas
+    :meth:`repro.kernels.ops.KernelImpl.topk_select_tree` — the masking
+    semantics live exactly once so the providers' documented bit-identity
+    cannot drift). ``select_leaf(delta_leaf, err_leaf) -> (Selection,
+    new_err_leaf)`` produces one leaf's compacted selection + fused EF
+    residual; this wrapper applies the participation mask —
+    non-participating clients (``mask == 0``) contribute zero values to
+    the collective and keep their error unchanged.
+
+    Returns ``(sel_tree, err_tree)`` where ``sel_tree`` has
+    :class:`~repro.core.compressors.Selection` leaves (flat global ``idx``
+    in the per-leaf zero-padded block domain)."""
+    flat_d, tdef = jax.tree_util.tree_flatten(delta)
+    flat_e = jax.tree_util.tree_leaves(err)
+    sels, errs = [], []
+    for dd, ee in zip(flat_d, flat_e):
+        sel, ne = select_leaf(dd, ee)
+        sels.append(Selection(vals=sel.vals * (mask > 0), idx=sel.idx))
+        errs.append(jnp.where(mask > 0, ne, ee))
+    return (jax.tree_util.tree_unflatten(tdef, sels),
+            jax.tree_util.tree_unflatten(tdef, errs))
+
+
+def topk_select_tree(comp: Compressor, delta, err, mask):
+    """Select-once uplink for every leaf of this device's shard tree —
+    the jnp sibling of :meth:`repro.kernels.ops.KernelImpl.topk_select_tree`
+    (identical contract, bit-identical selection/EF).
+
+    Per leaf: the EF total ``delta + err`` is selected ONCE
+    (``comp.select`` — the same ``lax.top_k``/argmax semantics as the
+    dense blocktopk path) and error feedback finishes as an O(k) scatter
+    that zeroes exactly the selected coordinates (``tot − hat`` is ``tot``
+    with the kept entries zeroed; no dense hat is ever built). Padded-tail
+    indices (``idx >= d``) carry value 0.0 and are dropped by the
+    scatter."""
+
+    def leaf(dd, ee):
+        tot = (dd + ee).reshape(-1)
+        sel = comp.select(tot)
+        return sel, tot.at[sel.idx].set(0.0).reshape(ee.shape)
+
+    return select_tree(leaf, delta, err, mask)
+
+
+def sparse_topk_leaf(sel: Selection, leaf, n_eff, ctx: ParallelContext):
+    """Beyond-paper: aggregate one leaf from the clients' compacted
+    Selections — the client-axis all_gather carries the already-selected
+    ``(vals, idx)`` pairs (~2k words instead of d) and the server side is
+    one scatter-add, exactly :func:`server_aggregate_sparse` over the
+    gathered entries. The selection itself (and its fused EF residual)
+    comes from the provider — :func:`topk_select_tree` or the Pallas
+    ``KernelImpl.topk_select_tree`` — so no dense per-client hat exists on
+    this path. ``leaf`` supplies the output shape; padded-tail indices
+    (``idx >= leaf.size``) are dropped by the scatter."""
+    d = leaf.size
+    g_vals = ctx.all_gather_clients(sel.vals[None], axis=0).reshape(-1)
+    g_idx = ctx.all_gather_clients(sel.idx[None], axis=0).reshape(-1)
     # NB: fresh zeros (replicated vma) — zeros_like(varying) would taint the
     # aggregate as client-varying.
-    zeros = jnp.zeros(nb * bs, flat.dtype)
-    agg = (zeros.at[g_idx].add(g_vals) / n_eff)[:d]
-    return agg.reshape(tot.shape), hat.reshape(tot.shape)
+    zeros = jnp.zeros(d, jnp.float32)
+    agg = zeros.at[g_idx].add(g_vals) / n_eff
+    return agg.reshape(leaf.shape)
 
 
 def packed_sign_leaf(tot, my_mask, n_eff, ctx: ParallelContext):
@@ -237,30 +322,47 @@ def _split_pairs(pairs):
             jax.tree.map(lambda pr: pr[1], pairs, is_leaf=is_pair))
 
 
+_is_selection = lambda x: isinstance(x, Selection)
+
+
 def mesh_uplink(fed: FedConfig, comp: Optional[Compressor],
                 ctx: ParallelContext, kernel_impl, rng, delta, my_err,
                 my_mask, n_eff):
     """This device's delta shards → (aggregated update, next EF error).
 
-    Selects the aggregation strategy (DESIGN.md §3) — dense psum, sparse
-    blockwise-top-k gather, or packed-sign gather — applies masked error
-    feedback, and narrows the dense collective to ``fed.delta_dtype`` with
-    EF tracking the narrowed value."""
+    Resolves the aggregation strategy (:func:`mesh_agg_strategy`,
+    DESIGN.md §3) — dense psum, compacted-Selection gather, or packed-sign
+    gather — applies masked error feedback, and narrows the dense
+    collective to ``fed.delta_dtype`` with EF tracking the narrowed value.
+
+    On the sparse top-k strategy the selection happens ONCE per leaf
+    (``fed.mesh_sparse_impl``: the fused Pallas kernel emits the compacted
+    ``(vals, idx)`` block and the EF residual in one HBM pass; the jnp
+    fallback is ``Compressor.select`` + an O(k) EF scatter — bit-identical
+    selection either way), and the client-axis collective carries that
+    Selection, never a dense hat."""
     if comp is None:
         return agg_dense(delta, my_mask, n_eff, ctx, fed.delta_dtype), my_err
 
-    sparse = fed.aggregation == "sparse"
-    if sparse and fed.compressor in ("topk", "blocktopk", "packedsign"):
-        if fed.compressor == "packedsign":
-            leaf_fn = lambda t: packed_sign_leaf(t, my_mask, n_eff, ctx)
-        else:
-            leaf_fn = lambda t: sparse_topk_leaf(t, fed.compress_ratio,
-                                                 my_mask, n_eff, ctx)
+    strategy = mesh_agg_strategy(fed)
+    if strategy == "packed_sign":
         tot = jax.tree.map(lambda dd, ee: dd + ee, delta, my_err)
-        agg, hat = _split_pairs(jax.tree.map(leaf_fn, tot))
+        agg, hat = _split_pairs(jax.tree.map(
+            lambda t: packed_sign_leaf(t, my_mask, n_eff, ctx), tot))
         new_err = jax.tree.map(
             lambda t, h, eo: jnp.where(my_mask > 0, t - h, eo),
             tot, hat, my_err)
+        return agg, new_err
+
+    if strategy == "sparse_topk":
+        if resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel":
+            sels, new_err = kernel_impl.topk_select_tree(
+                comp.ratio, delta, my_err, my_mask)
+        else:
+            sels, new_err = topk_select_tree(comp, delta, my_err, my_mask)
+        agg = jax.tree.map(
+            lambda s, lf: sparse_topk_leaf(s, lf, n_eff, ctx),
+            sels, delta, is_leaf=_is_selection)
         return agg, new_err
 
     if kernel_impl is not None:

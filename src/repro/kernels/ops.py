@@ -48,6 +48,12 @@ class KernelImpl:
     def _interp(self) -> bool:
         return _resolve_interpret(self.interpret)
 
+    @property
+    def compiled(self) -> bool:
+        """True when the kernels run as compiled Pallas (TPU) rather than
+        the interpreter — what ``mesh_sparse_impl='auto'`` keys off."""
+        return not self._interp
+
     # -- error-feedback compression ------------------------------------
     def ef_compress_leaf(self, comp_name: str, ratio: float, x, err):
         from repro.core.compressors import block_layout
@@ -83,9 +89,11 @@ class KernelImpl:
 
         This is the TPU entry point for the select-once pipeline
         (DESIGN.md §3): one HBM pass per tile emits the compacted block.
-        The sim backend uses the jnp ``Compressor.select`` (compiled XLA
-        beats interpret-mode Pallas off-TPU); routing ``mesh_uplink``'s
-        sparse aggregation through this leaf is a ROADMAP item."""
+        ``mesh_uplink``'s sparse aggregation routes through it (via
+        :meth:`topk_select_tree`) when ``fed.mesh_sparse_impl`` resolves
+        to the kernel; the sim backend and the off-TPU mesh default use
+        the jnp ``Compressor.select`` (compiled XLA beats interpret-mode
+        Pallas off-TPU)."""
         from repro.core.compressors import block_layout
         bs, _ = block_layout(x.size, self.block)
         flat, n = _pad_flat(x, bs)
@@ -95,6 +103,25 @@ class KernelImpl:
                                         interpret=self._interp)
         sel = Selection(vals=vals.reshape(-1), idx=idx.reshape(-1))
         return sel, ne[:n].reshape(err.shape)
+
+    def topk_select_tree(self, ratio: float, delta, err, mask):
+        """Fused select-once uplink for every leaf of this device's shard
+        tree — the kernel sibling of
+        :func:`repro.core.stages.topk_select_tree` (identical contract):
+        per leaf one ``topk_ef_sparse`` HBM pass emits the compacted
+        ``(vals, idx)`` Selection AND the EF residual; no dense hat is
+        materialized anywhere. Non-participating clients (``mask == 0``)
+        contribute zero values and keep their error unchanged.
+
+        Returns ``(sel_tree, err_tree)`` with
+        :class:`~repro.core.compressors.Selection` leaves whose ``idx``
+        are flat positions in each leaf's zero-padded block domain —
+        bit-identical to ``Compressor.select`` on ``delta + err``
+        (tests/test_kernels.py)."""
+        from repro.core.stages import select_tree
+        return select_tree(
+            lambda d, e: self.topk_select_leaf(ratio, d, e),
+            delta, err, mask)
 
     def ef_compress_tree(self, comp: Compressor, delta, err, mask):
         name = comp.name.split("_")[0]

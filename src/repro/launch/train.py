@@ -33,6 +33,14 @@ def main(argv=None) -> None:
     ap.add_argument("--compressor", default="topk")
     ap.add_argument("--ratio", type=float, default=1.0 / 64.0)
     ap.add_argument("--aggregation", default="dense")
+    ap.add_argument("--mesh-sparse-impl", default="auto",
+                    choices=("auto", "kernel", "jnp"),
+                    help="sparse-aggregation selection provider (DESIGN.md "
+                         "§3): the fused Pallas topk_ef_sparse kernel vs "
+                         "the jnp Compressor.select path; auto = kernel "
+                         "where it compiles (TPU), jnp elsewhere. NB "
+                         "forcing 'kernel' implies --use-kernels (the "
+                         "whole KernelImpl: fused server update + EF too)")
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--local-opt", default="sgd",
                     choices=("sgd", "sgdm", "prox"),
@@ -85,6 +93,7 @@ def main(argv=None) -> None:
     num_clients = args.dp
     fed = FedConfig(algorithm=args.algorithm, compressor=args.compressor,
                     compress_ratio=args.ratio, aggregation=args.aggregation,
+                    mesh_sparse_impl=args.mesh_sparse_impl,
                     local_steps=args.local_steps, num_clients=num_clients,
                     local_opt=args.local_opt,
                     local_momentum=args.local_momentum,
@@ -100,7 +109,11 @@ def main(argv=None) -> None:
                           tp=args.tp, client_axes=fed.client_axes,
                           num_clients=fed.num_clients)
 
-    kernel_impl = KernelImpl() if args.use_kernels else None
+    # forcing the kernel selection provider implies constructing the whole
+    # KernelImpl — build_fed_round then also routes the server update and
+    # dense-path EF through the fused kernels, exactly as --use-kernels
+    kernel_impl = (KernelImpl() if args.use_kernels
+                   or args.mesh_sparse_impl == "kernel" else None)
     rnd = build_fed_round(model, fed, train, ctx, kernel_impl=kernel_impl)
     sdefs = fed_state_defs(model, fed)
     state_specs = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)

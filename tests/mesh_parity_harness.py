@@ -1,0 +1,331 @@
+"""Subprocess side of the sim-vs-mesh differential parity harness.
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` via
+``tests/conftest.py::run_forced_devices`` (imported by
+``tests/test_mesh_parity.py``; never collected by pytest). One process
+executes EVERY grid case so both backends of every pair share one jax
+init and one XLA codegen (bit-parity claims are same-process claims —
+see CHANGES.md PR 3 note).
+
+The differential fixture is a single-leaf model whose local phase has no
+floating-point reassociation freedom at all:
+
+    loss(w, batch) = 0.5 · Σ_b Σ_j (w_j − t_{b,j})²   with B = 2 rows
+
+so the gradient is the two-term sum ``(w − t_0) + (w − t_1)`` — float
+addition is commutative (only associativity is order-sensitive), so the
+vmapped FedSim local phase and the per-device mesh local phase produce
+bit-identical deltas (a host-side replay would NOT: XLA fuses
+``w − η·g`` into an FMA inside the jitted rounds, so only same-program /
+same-fusion pairs are bitwise comparable). Everything downstream — EF
+totals, the selection, packed-sign hats, the compacted-Selection
+collective, the server update — is then compared at the bit level.
+``errors`` equality IS the per-round selection equality: the EF residual
+is ``tot`` with exactly the selected coordinates zeroed, so two backends
+with bit-equal state that selected differently would disagree on the EF
+rows wherever ``tot ≠ 0``. That each backend's selection equals the
+*reference* compressor is the already-established other half of the
+chain: tests/test_sparse_uplink.py (sim select-once ≡ dense reference),
+tests/test_kernels.py (Pallas kernel ≡ ``Compressor.select``), and the
+single-device stage properties in tests/test_mesh_parity.py.
+
+Targets are quantized to a 0.25 grid so |tot| ties actually occur and the
+``lax.top_k`` lowest-index tie-breaking is exercised end-to-end (both
+backends must break them identically for the bitwise comparison to hold).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+D = 2176        # block_layout → 2 blocks of 2048, 1920-element padded tail
+M = 8           # clients == forced host devices
+BC = 2          # per-client batch rows per local step (2-term reduce only)
+K = 2           # local steps
+R = 3           # rounds per case
+ETA, ETA_L = 0.25, 0.0625
+RATIO = 1.0 / 8.0
+
+# name -> mesh-side FedConfig kwargs. The sim side mirrors the mesh's
+# documented topk -> blocktopk remap (core/mesh.py: per-leaf global top-k
+# is ill-defined on sharded leaves) and ignores aggregation /
+# mesh_sparse_impl; `wire` applies to the sim side only (the mesh's wire
+# IS the collective) — at float32 wire value dtype the sim wire path is
+# bit-exact, so the same mesh run must match both.
+CASES = {
+    "dense": dict(algorithm="fedams", compressor="none",
+                  aggregation="dense"),
+    "topk": dict(algorithm="fedcams", compressor="topk",
+                 aggregation="sparse"),
+    "blocktopk": dict(algorithm="fedcams", compressor="blocktopk",
+                      aggregation="sparse"),
+    "packedsign": dict(algorithm="fedcams", compressor="packedsign",
+                       aggregation="sparse"),
+    # the kernel-routed tentpole path: same grid point as "blocktopk" but
+    # the Selection comes out of the fused Pallas topk_ef_sparse kernel
+    # (interpret mode on CPU — bit-identical to the compiled TPU kernel)
+    "blocktopk_kernel": dict(algorithm="fedcams", compressor="blocktopk",
+                             aggregation="sparse",
+                             mesh_sparse_impl="kernel"),
+}
+
+
+def _round_targets(r: int):
+    """(K, GB, D) quantized targets for round ``r`` — the mesh batch.
+    Client i owns rows [i·BC, (i+1)·BC) of the GB axis (the "data"-axis
+    shard order), every local step."""
+    rng = np.random.default_rng(1000 + r)
+    t = rng.normal(size=(K, M * BC, D)).astype(np.float32)
+    return np.round(t * 4.0) / 4.0
+
+
+def _sim_batches(t):
+    """Mesh (K, GB, D) -> sim (M, K, BC, D), client-major."""
+    return t.reshape(K, M, BC, D).transpose(1, 0, 2, 3)
+
+
+class ParityModel:
+    """Single-leaf deterministic model (see module docstring)."""
+
+    def __init__(self, d: int = D):
+        self.d = d
+
+    def defs(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.models import params as pdefs
+        return {"w": pdefs.ParamDef((self.d,), P(), dtype="float32")}
+
+    def loss(self, p, b, ctx, remat_policy="none", chunk=0):
+        import jax.numpy as jnp
+        diff = p["w"][None, :] - b["t"]
+        return 0.5 * jnp.sum(diff * diff), ()
+
+    def train_batch_defs(self, global_batch, seq_len):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.models import params as pdefs
+        return {"t": pdefs.ParamDef((global_batch, self.d), P(None, None),
+                                    dtype="float32")}
+
+
+def _run_mesh(fed, rounds_targets, kernel_impl):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.configs.base import TrainConfig
+    from repro.core.mesh import (build_fed_round, fed_batch_defs,
+                                 fed_state_defs, init_fed_state)
+    from repro.launch.mesh import make_mesh
+    from repro.models import params as pdefs
+    from repro.sharding.rules import ParallelContext
+    from jax.sharding import PartitionSpec as P
+
+    model = ParityModel()
+    train = TrainConfig(global_batch=M * BC, seq_len=1, remat_policy="none")
+    mesh = make_mesh((M,), ("data",))
+    ctx = ParallelContext(client_axes=("data",), num_clients=M)
+    sdefs = fed_state_defs(model, fed)
+    ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
+    bsp = jax.tree.map(lambda d: d.spec, fed_batch_defs(model, fed, train),
+                       is_leaf=pdefs.is_def)
+    rnd = jax.jit(compat.shard_map(
+        build_fed_round(model, fed, train, ctx, kernel_impl=kernel_impl),
+        mesh=mesh, in_specs=(ssp, bsp, P()),
+        out_specs=(ssp, {"loss": P(), "wire_up_bytes": P()})))
+    state = init_fed_state(model, fed, jax.random.PRNGKey(0))
+    out = []
+    for r, t in enumerate(rounds_targets):
+        state, met = rnd(state, {"t": jnp.asarray(t)}, jnp.int32(r))
+        out.append(dict(
+            params=np.asarray(state.params["w"]),
+            errors=np.asarray(state.errors["w"]),
+            loss=float(met["loss"]),
+            wire_up_bytes=float(met["wire_up_bytes"])))
+    return out
+
+
+def _run_sim(fed, rounds_targets):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.sim import FedSim
+    from repro.models import params as pdefs
+
+    model = ParityModel()
+    sim = FedSim(lambda p, b: model.loss(p, b, None), fed)
+    st = sim.init(pdefs.init_params(model.defs(), jax.random.PRNGKey(0)))
+    out = []
+    for r, t in enumerate(rounds_targets):
+        st, met = sim.round(st, {"t": jnp.asarray(_sim_batches(t))},
+                            jnp.arange(M, dtype=jnp.int32),
+                            jax.random.PRNGKey(100 + r))
+        out.append(dict(
+            params=np.asarray(st.params["w"]),
+            errors=np.asarray(st.errors),
+            loss=float(met["loss"])))
+    return out
+
+
+def _select_only_kernel_impl():
+    """A KernelImpl that serves ONLY the sparse-uplink selection: the
+    server update stays on the shared jnp ``server_update`` (passing a
+    full KernelImpl also swaps in the fused Pallas FedAMS server kernel,
+    whose different-but-equivalent op grouping costs ~1 ulp/round — a
+    deviation tests/test_kernels.py owns, not this uplink harness)."""
+    from repro.core.server_opt import server_update
+    from repro.kernels.ops import KernelImpl
+
+    class SelectOnlyKernelImpl(KernelImpl):
+        def fedams_update_tree(self, fed, st, params, agg):
+            return server_update(fed, st, params, agg)
+
+    return SelectOnlyKernelImpl()
+
+
+def run_case(name: str, wire: bool) -> list:
+    """One paired run -> per-round tree-compare summary dicts."""
+    from repro.configs.base import FedConfig
+
+    kw = dict(CASES[name])
+    mesh_impl = kw.pop("mesh_sparse_impl", "auto")
+    common = dict(compress_ratio=RATIO, local_steps=K, num_clients=M,
+                  eta=ETA, eta_l=ETA_L)
+    fed_mesh = FedConfig(client_axes=("data",), mesh_sparse_impl=mesh_impl,
+                         **kw, **common)
+    sim_kw = dict(kw)
+    if sim_kw["compressor"] == "topk":     # mirror the mesh's documented remap
+        sim_kw["compressor"] = "blocktopk"
+    fed_sim = FedConfig(client_axes=(), wire=wire, **sim_kw, **common)
+
+    targets = [_round_targets(r) for r in range(R)]
+    ki = _select_only_kernel_impl() if mesh_impl == "kernel" else None
+    mesh_rounds = _run_mesh(fed_mesh, targets, ki)
+    sim_rounds = _run_sim(fed_sim, targets)
+
+    rows = []
+    for r, (mr, sr) in enumerate(zip(mesh_rounds, sim_rounds)):
+        scale = float(max(np.abs(sr["params"]).max(), 1e-30))
+        rows.append({
+            "round": r,
+            "errors_bitwise": bool((mr["errors"] == sr["errors"]).all()),
+            "errors_maxdiff": float(
+                np.abs(mr["errors"] - sr["errors"]).max()),
+            "params_bitwise": bool((mr["params"] == sr["params"]).all()),
+            # params inherit exactly the aggregate's difference through the
+            # elementwise server update -> report it in ulp-like units
+            "params_maxdiff_rel": float(
+                np.abs(mr["params"] - sr["params"]).max() / scale),
+            "loss_mesh": mr["loss"], "loss_sim": sr["loss"],
+            "wire_up_bytes": mr["wire_up_bytes"],
+        })
+    return rows
+
+
+def jaxpr_payload(compressor: str) -> dict:
+    """Trace (never execute) the sparse mesh round for a TWO-leaf model and
+    measure what the client-axis all_gathers actually carry, plus how many
+    selections run. Returns per-trace totals and the `mesh_wire_bytes`
+    metric for the same config, so the test can assert metric == measured.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.core.mesh import (build_fed_round, fed_batch_defs,
+                                 fed_state_defs, init_fed_state,
+                                 mesh_wire_bytes)
+    from repro.launch.mesh import make_mesh
+    from repro.models import params as pdefs
+    from repro.sharding.rules import ParallelContext
+
+    class TwoLeafModel(ParityModel):
+        # second leaf (300 elements: one 384-wide padded block) rides along
+        # so per-leaf counts are distinguishable from per-tree counts
+        def defs(self):
+            base = super().defs()
+            base["b"] = pdefs.ParamDef((300,), P(), dtype="float32")
+            return base
+
+        def loss(self, p, b, ctx, remat_policy="none", chunk=0):
+            diff = p["w"][None, :] - b["t"]
+            return (0.5 * jnp.sum(diff * diff)
+                    + 0.5 * jnp.sum(p["b"] * p["b"]), ())
+
+    fed = FedConfig(algorithm="fedcams", compressor=compressor,
+                    aggregation="sparse", compress_ratio=RATIO,
+                    local_steps=K, num_clients=M, eta=ETA, eta_l=ETA_L,
+                    client_axes=("data",))
+    model = TwoLeafModel()
+    train = TrainConfig(global_batch=M * BC, seq_len=1, remat_policy="none")
+    mesh = make_mesh((M,), ("data",))
+    ctx = ParallelContext(client_axes=("data",), num_clients=M)
+    sdefs = fed_state_defs(model, fed)
+    ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
+    bsp = jax.tree.map(lambda d: d.spec, fed_batch_defs(model, fed, train),
+                       is_leaf=pdefs.is_def)
+    fn = compat.shard_map(build_fed_round(model, fed, train, ctx),
+                          mesh=mesh, in_specs=(ssp, bsp, P()),
+                          out_specs=(ssp, {"loss": P(),
+                                           "wire_up_bytes": P()}))
+    state = init_fed_state(model, fed, jax.random.PRNGKey(0))
+    jaxpr = jax.make_jaxpr(fn)(
+        state, {"t": jnp.zeros((K, M * BC, D), jnp.float32)}, jnp.int32(0))
+
+    gathered = []      # (bytes, shape) per all_gather operand
+    counts = {"top_k": 0, "argmax": 0}
+
+    try:  # jax >= 0.6 moved the jaxpr types; 0.4.x has them on jax.core
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:  # pragma: no cover
+        ClosedJaxpr, Jaxpr = jax.core.ClosedJaxpr, jax.core.Jaxpr
+
+    def subjaxprs(params):
+        for v in params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for s in vs:
+                if isinstance(s, ClosedJaxpr):
+                    yield s.jaxpr
+                elif isinstance(s, Jaxpr):
+                    yield s
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("all_gather", "all_gather_invariant"):
+                v = eqn.invars[0].aval
+                gathered.append([int(np.prod(v.shape)) * v.dtype.itemsize,
+                                 list(v.shape)])
+            if eqn.primitive.name in counts:
+                counts[eqn.primitive.name] += 1
+            for s in subjaxprs(eqn.params):
+                walk(s)
+
+    walk(jaxpr.jaxpr)
+
+    delta_tree = {"w": np.zeros(D, np.float32), "b": np.zeros(300, np.float32)}
+    return {
+        "gathered": gathered,
+        "gathered_bytes": int(sum(g[0] for g in gathered)),
+        "top_k": counts["top_k"], "argmax": counts["argmax"],
+        "metric_bytes": int(mesh_wire_bytes(fed, delta_tree, tp=1)),
+        "dense_bytes": 4 * (D + 300),
+        "num_leaves": 2,
+    }
+
+
+def main() -> None:
+    out = {"cases": {}, "jaxpr": {}}
+    for name in CASES:
+        for wire in (False, True):
+            out["cases"][f"{name}_wire{int(wire)}"] = run_case(name, wire)
+    for compressor in ("blocktopk", "packedsign"):
+        out["jaxpr"][compressor] = jaxpr_payload(compressor)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

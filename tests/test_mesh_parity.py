@@ -1,0 +1,309 @@
+"""Sim-vs-mesh differential parity harness (DESIGN.md §3).
+
+The two execution backends — FedSim's vmapped global-vector simulation and
+the shard_map mesh SPMD path — must be the SAME algorithm. This file makes
+that a permanent fixture instead of per-PR spot checks:
+
+* **Paired runs** (``tests/mesh_parity_harness.py`` under a forced
+  8-device subprocess via ``conftest.run_forced_devices``): identical
+  configs across (dense, topk, blocktopk, packedsign, kernel-routed
+  blocktopk) × (wire on/off), three rounds each. Per-client EF state is
+  asserted BIT-identical — which is also the per-round selection-equality
+  proof: the EF residual is ``tot`` with exactly the selected coordinates
+  zeroed, so differing selections would disagree wherever ``tot ≠ 0``.
+  Params (the aggregate pushed through the elementwise server update) are
+  bit-identical on the compacted-Selection paths — the gathered scatter-add
+  runs in the same client order as the sim's segment scatter — and within
+  ~1 ulp on the dense psum path (AllReduce vs axis-0 reduce association).
+* **Jaxpr payload regression**: the traced sparse mesh round's client-axis
+  all_gathers carry O(k) words per leaf (never d), run exactly one
+  selection per leaf, and their operand bytes equal ``mesh_wire_bytes``
+  — the wire metric is measured truth, not an analytic estimate.
+* **Single-device stage properties** (hypothesis, with the
+  tests/hypothesis_fallback shim): the mesh select-once stages
+  (``topk_select_tree`` jnp + Pallas ``KernelImpl.topk_select_tree``,
+  ``sparse_topk_leaf``, ``packed_sign_leaf``) against the dense reference
+  compressor — tie-breaking identical to ``lax.top_k``, padded tails when
+  ``d % block != 0``, packed bits when ``d % 8 != 0``. A unit-size
+  ``ParallelContext`` turns the collectives into identities, so the leaf
+  numerics are testable without a mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # see tests/hypothesis_fallback.py
+    from hypothesis_fallback import given, settings, st
+
+from conftest import forced_devices_json
+
+from repro.configs.base import FedConfig
+from repro.core.compressors import block_layout, make_compressor
+from repro.core.mesh import leaf_wire_bytes, mesh_wire_bytes
+from repro.core.stages import (mesh_agg_strategy, mesh_uplink,
+                               packed_sign_leaf, resolve_mesh_sparse_impl,
+                               sparse_topk_leaf, topk_select_tree)
+from repro.kernels.ops import KernelImpl
+from repro.sharding.rules import ParallelContext
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+# -- paired sim/mesh runs (forced 8-device subprocess) -----------------------
+
+
+@pytest.fixture(scope="module")
+def parity():
+    """Run the whole config grid in ONE subprocess (shared jax init; both
+    sides of every pair see the same XLA codegen) and cache the per-round
+    tree-compare summaries."""
+    return forced_devices_json(
+        "from mesh_parity_harness import main; main()", devices=8,
+        timeout=1800)
+
+
+CASE_NAMES = ["dense", "topk", "blocktopk", "packedsign",
+              "blocktopk_kernel"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wire", [False, True], ids=["nowire", "wire"])
+@pytest.mark.parametrize("name", CASE_NAMES)
+def test_sim_mesh_parity(parity, name, wire):
+    rows = parity["cases"][f"{name}_wire{int(wire)}"]
+    assert len(rows) >= 3
+    for row in rows:
+        r = row["round"]
+        # EF state (== the selection, see module docstring): bit-identical
+        # on every strategy, every round
+        assert row["errors_bitwise"], (name, wire, r, row)
+        # losses are computed before aggregation -> identical
+        assert row["loss_mesh"] == pytest.approx(row["loss_sim"],
+                                                 rel=1e-6), (name, wire, r)
+        if name == "dense":
+            # dense psum vs the sim's axis-0 mean: association only
+            assert row["params_maxdiff_rel"] <= 2e-7, (name, wire, r, row)
+        else:
+            # compacted-Selection gather and packed-sign sum run in the
+            # sim's exact client order -> the whole state is bit-identical
+            assert row["params_bitwise"], (name, wire, r, row)
+
+
+@pytest.mark.slow
+def test_parity_wire_mode_changes_nothing(parity):
+    """The sim's wire mode (encode→decode at float32 values) is bit-exact,
+    so the SAME mesh run matches both the wire and non-wire sim — the
+    grid's wire dimension must be indistinguishable in the summaries."""
+    for name in CASE_NAMES:
+        a = parity["cases"][f"{name}_wire0"]
+        b = parity["cases"][f"{name}_wire1"]
+        for ra, rb in zip(a, b):
+            assert ra["errors_bitwise"] == rb["errors_bitwise"]
+            assert ra["loss_sim"] == rb["loss_sim"], name
+
+
+# -- jaxpr: the collective payload is O(k), selected exactly once ------------
+
+
+@pytest.mark.slow
+def test_sparse_mesh_payload_is_o_k_and_selects_once(parity):
+    """Traced blocktopk sparse round, two leaves (2176 and 300 elements):
+    exactly one top_k per leaf, two all_gathers per leaf (vals + idx), and
+    the gathered operand bytes are the compacted-Selection size — equal to
+    ``mesh_wire_bytes`` and far below the dense d-word payload."""
+    jx = parity["jaxpr"]["blocktopk"]
+    assert jx["top_k"] == jx["num_leaves"]        # one selection per leaf
+    assert jx["argmax"] == 0                      # (k > 1 everywhere here)
+    assert len(jx["gathered"]) == 2 * jx["num_leaves"]
+    # per-leaf expected payload: nb*kb (value, index) pairs, 8 bytes each
+    expect = sum(8 * nb * max(1, round(bs / 8))
+                 for bs, nb in (block_layout(2176, 2048),
+                                block_layout(300, 2048)))
+    assert jx["gathered_bytes"] == expect
+    assert jx["gathered_bytes"] == jx["metric_bytes"]
+    assert jx["gathered_bytes"] < jx["dense_bytes"] / 2
+
+
+@pytest.mark.slow
+def test_packed_sign_payload_matches_metric(parity):
+    """Packed-sign: the gather carries ceil(d/8) sign bytes + one fp32
+    scale per leaf, and the metric equals the traced payload."""
+    jx = parity["jaxpr"]["packedsign"]
+    assert jx["top_k"] == 0
+    assert jx["gathered_bytes"] == ((2176 + 7) // 8 + 4
+                                    + (300 + 7) // 8 + 4)
+    assert jx["gathered_bytes"] == jx["metric_bytes"]
+    assert jx["gathered_bytes"] < jx["dense_bytes"] / 16
+
+
+# -- mesh_wire_bytes: strategy resolution (the metric follows execution) -----
+
+
+def test_mesh_wire_bytes_resolves_through_executed_strategy():
+    """Every fallback the round takes, the metric takes too: sparse
+    aggregation with a compressor that has no compacted form, and
+    non-fedcams algorithms, are billed as the dense psum they run."""
+    tree = {"a": jnp.zeros(300)}
+    dense = 300 * 4
+    sparse_fed = FedConfig(algorithm="fedcams", aggregation="sparse",
+                           compressor="blocktopk", compress_ratio=1 / 64)
+    assert mesh_agg_strategy(sparse_fed) == "sparse_topk"
+    assert mesh_wire_bytes(sparse_fed, tree) < dense
+    # sign has no (vals, idx) form -> the round falls back to dense psum
+    for fallback in (FedConfig(algorithm="fedcams", aggregation="sparse",
+                               compressor="sign"),
+                     FedConfig(algorithm="fedcams", aggregation="sparse",
+                               compressor="int8"),
+                     FedConfig(algorithm="fedavg", aggregation="sparse",
+                               compressor="blocktopk")):
+        assert mesh_agg_strategy(fallback) == "dense"
+        assert mesh_wire_bytes(fallback, tree) == dense
+    # narrowed dense collective is billed at the narrowed dtype
+    bf16 = FedConfig(algorithm="fedcams", delta_dtype="bfloat16")
+    assert mesh_wire_bytes(bf16, tree) == 300 * 2
+    assert leaf_wire_bytes(sparse_fed, 300) == mesh_wire_bytes(sparse_fed,
+                                                               tree)
+
+
+def test_leaf_wire_bytes_follows_kernel_block():
+    """A non-default KernelImpl block changes the gathered layout; the
+    metric must be billed at the SAME block (build_fed_round threads one
+    ``sparse_block`` into the compressor, the kernel, and the metric)."""
+    fed = FedConfig(algorithm="fedcams", aggregation="sparse",
+                    compressor="blocktopk", compress_ratio=1 / 2048)
+    d = 2048
+    ki = KernelImpl(block=512)
+    sel, _ = ki.topk_select_leaf(1 / 2048, jnp.zeros(d),
+                                 jnp.zeros(d))
+    assert leaf_wire_bytes(fed, d, block=512) == sel.vals.size * 8
+    # billing the default layout instead would under-report 4x here
+    assert leaf_wire_bytes(fed, d, block=2048) != sel.vals.size * 8
+
+
+def test_mesh_sparse_impl_resolution():
+    """auto -> kernel only where it compiles (TPU); kernel demands an impl
+    at build time; jnp always wins when forced."""
+    fed = FedConfig(algorithm="fedcams", aggregation="sparse",
+                    compressor="blocktopk")
+    ki = KernelImpl()       # interpret resolves per backend (CPU here)
+    assert resolve_mesh_sparse_impl(fed, None) == "jnp"
+    assert resolve_mesh_sparse_impl(fed, ki) == (
+        "kernel" if ki.compiled else "jnp")
+    assert resolve_mesh_sparse_impl(
+        fed, KernelImpl(interpret=False)) == "kernel"
+    forced = FedConfig(algorithm="fedcams", aggregation="sparse",
+                       compressor="blocktopk", mesh_sparse_impl="kernel")
+    assert resolve_mesh_sparse_impl(forced, ki) == "kernel"
+    with pytest.raises(ValueError, match="mesh_sparse_impl"):
+        resolve_mesh_sparse_impl(forced, None)
+    with pytest.raises(ValueError, match="mesh_sparse_impl"):
+        FedConfig(mesh_sparse_impl="pallas")
+
+
+# -- single-device stage properties ------------------------------------------
+
+_CTX1 = ParallelContext()    # no client axes: collectives are identities
+
+
+def _uplink_1client(comp, tot, impl="jnp", block=64):
+    """Run the mesh sparse uplink machinery for ONE participating client:
+    returns (agg, new_err) — with identity collectives and n_eff=1 the
+    aggregate must equal the dense reference compression of tot."""
+    delta = {"x": tot}
+    err = {"x": jnp.zeros_like(tot)}
+    if impl == "kernel":
+        sels, errs = KernelImpl(block=block).topk_select_tree(
+            comp.ratio, delta, err, jnp.float32(1.0))
+    else:
+        sels, errs = topk_select_tree(comp, delta, err, jnp.float32(1.0))
+    agg = sparse_topk_leaf(sels["x"], tot, 1.0, _CTX1)
+    return agg, errs["x"]
+
+
+@given(st.integers(8, 5000), st.sampled_from([1 / 2, 1 / 8, 1 / 64]))
+def test_sparse_leaf_padded_tail_matches_dense(d, ratio):
+    """Property: for any leaf size (d % block != 0 included — the final
+    block selects from the zero-padded domain), the select-once mesh
+    uplink reproduces the dense blocktopk compression and its EF residual
+    exactly, on BOTH selection providers."""
+    block = 64
+    comp = make_compressor("blocktopk", ratio, block)
+    tot = jnp.asarray(np.random.default_rng(d).normal(size=d), jnp.float32)
+    ref = comp.compress(tot)
+    for impl in ("jnp", "kernel"):
+        agg, err = _uplink_1client(comp, tot, impl, block)
+        assert np.array_equal(np.asarray(agg), np.asarray(ref)), (impl, d)
+        assert np.array_equal(np.asarray(err), np.asarray(tot - ref)), (
+            impl, d, ratio)
+
+
+def test_sparse_leaf_tie_breaking_matches_top_k():
+    """Ties in |value| keep the lowest index, exactly like ``lax.top_k``,
+    through the whole mesh sparse uplink — jnp and kernel providers."""
+    block = 8
+    tot = jnp.asarray([1.0, -2.0, 2.0, -2.0, 0.5, 2.0, -1.0, 0.0,
+                       3.0, -3.0, 3.0, 0.0, 0.0, 0.0, 0.0, -3.0],
+                      jnp.float32)
+    comp = make_compressor("blocktopk", 2 / 8, block)
+    from jax import lax
+    xb = tot.reshape(2, block)
+    _, idx = lax.top_k(jnp.abs(xb), 2)
+    ref = jnp.zeros_like(xb).at[jnp.arange(2)[:, None], idx].set(
+        jnp.take_along_axis(xb, idx, axis=1)).reshape(-1)
+    for impl in ("jnp", "kernel"):
+        agg, err = _uplink_1client(comp, tot, impl, block)
+        assert np.array_equal(np.asarray(agg), np.asarray(ref)), impl
+        # block 1: |−2| at idx 1 and |2| at idx 2 tie -> keep 1 then 2
+        assert np.flatnonzero(np.asarray(agg)[:8]).tolist() == [1, 2]
+        # block 2: three 3.0s tie -> lowest two indices win
+        assert np.flatnonzero(np.asarray(agg)[8:]).tolist() == [0, 1]
+
+
+@given(st.integers(3, 600))
+def test_packed_sign_leaf_any_d(d):
+    """Property: packed_sign_leaf at any d (d % 8 != 0 pads the bit
+    buffer; the pad bits must be sliced off, not decoded as signs) equals
+    the sign compressor: hat == scale·sign(tot) with sign(0) := +1, and
+    the 1-client aggregate equals the hat."""
+    tot = jnp.asarray(np.random.default_rng(d).normal(size=d), jnp.float32)
+    tot = tot.at[d // 2].set(0.0)       # exercise sign(0) := +1
+    comp = make_compressor("sign")
+    ref = comp.compress(tot)
+    agg, hat = packed_sign_leaf(tot, jnp.float32(1.0), 1.0, _CTX1)
+    assert np.array_equal(np.asarray(hat), np.asarray(ref)), d
+    assert np.array_equal(np.asarray(agg), np.asarray(ref)), d
+
+
+def test_mesh_uplink_kernel_and_jnp_bit_identical():
+    """The full mesh_uplink stage (multi-leaf tree, masked client) agrees
+    bit-for-bit between the jnp and kernel selection providers."""
+    rng = np.random.default_rng(0)
+    delta = {"w": jnp.asarray(rng.normal(size=500), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(13, 7)), jnp.float32)}
+    err = jax.tree.map(
+        lambda x: 0.3 * jnp.asarray(rng.normal(size=x.shape), jnp.float32),
+        delta)
+    comp = make_compressor("blocktopk", 1 / 8)
+    for mask in (1.0, 0.0):
+        outs = {}
+        for impl, ki in (("jnp", None), ("kernel", KernelImpl())):
+            fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                            compress_ratio=1 / 8, aggregation="sparse",
+                            mesh_sparse_impl=impl if ki else "jnp")
+            outs[impl] = mesh_uplink(fed, comp, _CTX1, ki,
+                                     jax.random.PRNGKey(0), delta, err,
+                                     jnp.float32(mask), 1.0)
+        for leaf in delta:
+            a, e_a = outs["jnp"][0][leaf], outs["jnp"][1][leaf]
+            b, e_b = outs["kernel"][0][leaf], outs["kernel"][1][leaf]
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (mask, leaf)
+            assert np.array_equal(np.asarray(e_a), np.asarray(e_b))
+            if mask == 0.0:   # masked-out client: nothing sent, EF frozen
+                assert float(jnp.abs(a).max()) == 0.0
+                assert np.array_equal(np.asarray(e_a),
+                                      np.asarray(err[leaf]))

@@ -5,15 +5,11 @@ The key check: the shard_map mesh execution of the federated round is
 numerically equivalent to the pure-simulation path (same clients, same
 batches, same server math) — the SPMD mapping introduces no drift."""
 import json
-import os
-import subprocess
-import sys
-import textwrap
 
 import jax
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_forced_devices
 
 # Exact TP gradients through shard_map need the vma machinery
 # (jax.shard_map with check_vma); on jax 0.4.x the compat path runs the
@@ -25,13 +21,7 @@ requires_vma = pytest.mark.skipif(
 
 
 def run_sub(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=600)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
+    return run_forced_devices(code, devices, timeout=600)
 
 
 @pytest.mark.slow
