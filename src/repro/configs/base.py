@@ -218,6 +218,8 @@ FED_COMPRESSORS = ("topk", "blocktopk", "sign", "packedsign", "randk",
                    "int8", "none", "identity")
 FED_AGGREGATIONS = ("dense", "sparse")
 FED_MESH_SPARSE_IMPLS = ("auto", "kernel", "jnp")
+FED_FUSED_INGEST = ("auto", "kernel", "jnp", "off")
+FED_SERVER_STATE_DTYPES = ("float32", "bfloat16", "int8")
 FED_LOCAL_OPTS = ("sgd", "sgdm", "prox")
 
 
@@ -271,6 +273,25 @@ class FedConfig:
     # bit-identical, test-only speed). Selection and EF are bit-identical
     # across impls (tests/test_kernels.py, tests/test_mesh_parity.py).
     mesh_sparse_impl: str = "auto"  # auto | kernel | jnp
+    # One-pass fused server ingest (DESIGN.md §3): scatter-mean + the full
+    # FedAMS m/v/v̂/x update in a single read-modify-write over optimizer
+    # state — the dense mean delta is never materialized. "auto" = fuse
+    # whenever the round is eligible (sparse blocktopk uplink, no gamma
+    # diagnostic / client chunking / state sharding), picking the Pallas
+    # kernel (kernels/fedams_ingest.py) where it compiles (TPU) and the
+    # blocked-scatter jnp path elsewhere; "kernel"/"jnp" force one side
+    # (build-time error when the round cannot fuse); "off" = the two-pass
+    # baseline (server_aggregate_sparse + server_update). Bit-identical to
+    # the two-pass path at float32 state (tests/test_fused_ingest.py).
+    fused_ingest: str = "auto"      # auto | kernel | jnp | off
+    # Server second-moment (v, v̂) storage dtype: bf16 halves and
+    # int8-blockscale (one fp32 absmax scale per wire_block) quarters the
+    # optimizer-state HBM residency; the update math always runs in fp32,
+    # dequant/requant fused into the ingest pass. Non-fp32 requires an
+    # algorithm that overwrites v/v̂ every round (fedams family) — a
+    # passthrough state would drift under requantization. int8 is
+    # simulation-only (the blockscale layout has no mesh ParamDef form).
+    server_state_dtype: str = "float32"  # float32 | bfloat16 | int8
     # Compute the per-round Assumption 4.17 γ diagnostic (paper Fig. 6).
     # It costs an extra dense compression of the mean total per round;
     # production-style perf runs turn it off and the history reports
@@ -309,6 +330,22 @@ class FedConfig:
         check("aggregation", self.aggregation, FED_AGGREGATIONS)
         check("mesh_sparse_impl", self.mesh_sparse_impl,
               FED_MESH_SPARSE_IMPLS)
+        check("fused_ingest", self.fused_ingest, FED_FUSED_INGEST)
+        check("server_state_dtype", self.server_state_dtype,
+              FED_SERVER_STATE_DTYPES)
+        if (self.server_state_dtype != "float32"
+                and self.algorithm not in ("fedams", "fedcams",
+                                           "fedamsgrad")):
+            raise ValueError(
+                f"FedConfig.server_state_dtype={self.server_state_dtype!r} "
+                f"requires an algorithm that overwrites v/v̂ every round "
+                f"(fedams/fedcams/fedamsgrad) — {self.algorithm!r} would "
+                f"requant-drift passthrough state")
+        if self.server_state_dtype == "int8" and self.shard_server_state:
+            raise ValueError(
+                "FedConfig.server_state_dtype='int8' is incompatible with "
+                "shard_server_state — the blockscale layout does not "
+                "slice along the state-shard axes")
         check("local_opt", self.local_opt, FED_LOCAL_OPTS)
         check("wire_pack_impl", self.wire_pack_impl, ("jnp", "pallas"))
         check("sparse_uplink", self.sparse_uplink, (None, True, False))

@@ -25,9 +25,11 @@ from repro.core.compressors import make_compressor
 from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
                               run_local_steps)
 from repro.core.sampling import participation_mask
-from repro.core.server_opt import ServerState, server_update
+from repro.core.server_opt import (ServerState, server_ingest_tree,
+                                   server_update)
 from repro.core.stages import (mesh_agg_strategy, mesh_uplink,
-                               resolve_mesh_sparse_impl)
+                               resolve_fused_ingest,
+                               resolve_mesh_sparse_impl, topk_select_tree)
 from repro.models import params as pdefs
 from repro.sharding.rules import ParallelContext
 
@@ -97,9 +99,23 @@ def fed_state_defs(model, fed: FedConfig):
             spec=P(ax, *dref.spec), dtype="float32")
 
     opt = jax.tree.map(opt_leaf, par, is_leaf=pdefs.is_def)
+    # second-moment storage dtype (m always stays fp32): bf16 halves the
+    # v/v̂ HBM residency; int8-blockscale has no mesh ParamDef form
+    if fed.server_state_dtype == "int8":
+        raise ValueError(
+            "FedConfig.server_state_dtype='int8' is simulation-only — the "
+            "blockscale QuantState layout has no mesh ParamDef form; use "
+            "'bfloat16' on the mesh backend")
+    if fed.server_state_dtype == "bfloat16":
+        import dataclasses
+        second = jax.tree.map(
+            lambda dref: dataclasses.replace(dref, dtype="bfloat16"),
+            opt, is_leaf=pdefs.is_def)
+    else:
+        second = opt
     errors = jax.tree.map(client_stacked, par, is_leaf=pdefs.is_def)
     return FedMeshState(
-        params=par, m=opt, v=opt, vhat=opt, errors=errors,
+        params=par, m=opt, v=second, vhat=second, errors=errors,
         round=pdefs.ParamDef((), P(), dtype="int32", init="zeros"))
 
 
@@ -214,15 +230,31 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
     # (DESIGN.md §3; contraction bound unchanged). Exact global top-k lives
     # in the FedSim simulation path.
     comp_name = "blocktopk" if fed.compressor == "topk" else fed.compressor
+    strategy = mesh_agg_strategy(fed)
+    # One-pass fused ingest (DESIGN.md §3): resolved at build time like the
+    # selection provider. Eligible only on the compacted-Selection strategy
+    # (the gathered (vals, idx) feed the ingest directly) without state
+    # sharding (the fused pass owns the whole replicated update).
+    fused = resolve_fused_ingest(
+        fed,
+        eligible=(strategy == "sparse_topk"
+                  and not (fed.shard_server_state and fed.state_shards > 1)),
+        have_kernel=kernel_impl is not None,
+        compiled=kernel_impl is not None and kernel_impl.compiled,
+        detail="the mesh fuses only the sparse_topk aggregation strategy "
+               "(fedcams + aggregation='sparse' + topk/blocktopk) without "
+               "shard_server_state")
     # One block layout for the whole sparse path: when the kernel provider
-    # will select, the jnp compressor, the kernel, and the wire metric all
-    # use the kernel's block — layout mismatches would silently break the
-    # kernel/jnp bit-identity and the metric==payload invariant.
+    # will select OR the kernel ingest will consume, the jnp compressor,
+    # the kernels, and the wire metric all use the kernel's block — layout
+    # mismatches would silently break the kernel/jnp bit-identity and the
+    # metric==payload invariant.
     sparse_block = 2048
-    if mesh_agg_strategy(fed) == "sparse_topk":
+    if strategy == "sparse_topk":
         # resolve at build time, not inside the traced round: 'kernel'
         # without a KernelImpl has nothing to select with
-        if resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel":
+        if (resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel"
+                or fused == "kernel"):
             sparse_block = kernel_impl.block
     comp = (make_compressor(comp_name, fed.compress_ratio, sparse_block)
             if fed.algorithm == "fedcams" else None)
@@ -285,18 +317,42 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
         n_eff = float(n_part)
 
         my_err = jax.tree.map(lambda e: e[0], state.errors)  # local client slice
-        agg, new_err = mesh_uplink(fed, comp, ctx, kernel_impl, rng,
-                                   delta, my_err, my_mask, n_eff)
-
-        # server update (replicated elementwise math on sharded leaves)
         st = ServerState(m=state.m, v=state.v, vhat=state.vhat, t=state.round)
-        if kernel_impl is not None and fed.algorithm in ("fedams", "fedcams"):
-            new_params, new_st = kernel_impl.fedams_update_tree(fed, st, params, agg)
-        elif fed.shard_server_state and fed.state_shards > 1:
-            new_params, new_st = _sharded_server_update(fed, st, params, agg,
-                                                        model, ctx)
+        if fused != "off":
+            # one-pass fused ingest: select once (same provider resolution
+            # as mesh_uplink's sparse branch), all_gather the compacted
+            # Selections (identical collective + payload to
+            # sparse_topk_leaf), and run scatter-mean + FedAMS update in a
+            # single read-modify-write over the optimizer state — no dense
+            # mean delta is materialized (bit-identical at fp32 state)
+            if resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel":
+                sels, new_err = kernel_impl.topk_select_tree(
+                    comp.ratio, delta, my_err, my_mask)
+            else:
+                sels, new_err = topk_select_tree(comp, delta, my_err,
+                                                 my_mask)
+            gather = lambda a: ctx.all_gather_clients(a[None], axis=0)
+            if fused == "kernel":
+                new_params, new_st = kernel_impl.fedams_ingest_tree(
+                    fed, st, params, sels, n_eff, gather)
+            else:
+                new_params, new_st = server_ingest_tree(
+                    fed, st, params, sels, n_eff, gather,
+                    block=sparse_block, impl="jnp")
         else:
-            new_params, new_st = server_update(fed, st, params, agg)
+            agg, new_err = mesh_uplink(fed, comp, ctx, kernel_impl, rng,
+                                       delta, my_err, my_mask, n_eff)
+
+            # server update (replicated elementwise math on sharded leaves)
+            if kernel_impl is not None and fed.algorithm in (
+                    "fedams", "fedcams", "fedamsgrad"):
+                new_params, new_st = kernel_impl.fedams_update_tree(
+                    fed, st, params, agg)
+            elif fed.shard_server_state and fed.state_shards > 1:
+                new_params, new_st = _sharded_server_update(
+                    fed, st, params, agg, model, ctx)
+            else:
+                new_params, new_st = server_update(fed, st, params, agg)
 
         errors = jax.tree.map(lambda e, ne: e.at[0].set(ne),
                               state.errors, new_err)

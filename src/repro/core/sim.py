@@ -21,10 +21,12 @@ from repro.configs.base import FedConfig
 from repro.core.compressors import Compressor, make_compressor
 from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
                               run_local_steps)
-from repro.core.server_opt import init_server_state, server_update
+from repro.core.server_opt import (init_server_state, server_ingest,
+                                   server_update)
 from repro.core.stages import (client_uplink, client_uplink_sparse,
                                ef_update_sparse, gamma_diagnostic,
-                               server_aggregate_sparse, server_downlink)
+                               resolve_fused_ingest, server_aggregate_sparse,
+                               server_downlink)
 
 
 class SimState(NamedTuple):
@@ -106,6 +108,22 @@ class FedSim:
                 f"client_chunk={fed.client_chunk} must divide the "
                 f"per-round client count n={n_round} — a silent fallback "
                 f"to the full (n, d) vmap would defeat the memory bound")
+        # one-pass fused server ingest (DESIGN.md §3): the (vals, idx)
+        # selection goes straight into the m/v/v̂/x update — needs the
+        # block-grouped selection layout (blocktopk), no dense-aggregate
+        # consumer (γ diagnostic), and the unchunked sparse path (the
+        # chunked round accumulates a dense running scatter instead)
+        chunked = bool(fed.client_chunk) and 0 < fed.client_chunk < n_round
+        eligible = (self.sparse and self.comp is not None
+                    and self.comp.name.startswith("blocktopk")
+                    and not fed.track_gamma and not chunked)
+        from repro.kernels.bitpack import _resolve_interpret
+        self._fused = resolve_fused_ingest(
+            fed, eligible=eligible, have_kernel=True,
+            compiled=not _resolve_interpret(None),
+            detail="FedSim fuses only the unchunked sparse blocktopk "
+                   "uplink with track_gamma=False (the γ diagnostic and "
+                   "the client_chunk scan both consume a dense aggregate)")
         self._round_fn = None
         self._scan_fn = None
         self.codec = None
@@ -132,6 +150,11 @@ class FedSim:
         flat, self.unravel = ravel_pytree(params)
         d = flat.size
         self._d = d
+        # the selection block layout (== the fused ingest / int8 quant
+        # layout): block_layout clamps wire_block exactly like the
+        # compressor will at select time
+        from repro.core.compressors import block_layout
+        self._ingest_block = block_layout(d, self.fed.wire_block)[0]
         m = self.fed.num_clients
         # copy the caller's params ONCE: the first round donates the state's
         # buffers, and consuming arrays the caller still owns would poison
@@ -139,7 +162,8 @@ class FedSim:
         params = jax.tree.map(jnp.array, params)
         return SimState(
             params=params,
-            opt=init_server_state(flat),
+            opt=init_server_state(flat, self.fed.server_state_dtype,
+                                  self._ingest_block),
             errors=jnp.zeros((m, d), jnp.float32),
             server_error=jnp.zeros((d,), jnp.float32),
             x_client=flat,
@@ -349,8 +373,23 @@ class FedSim:
                 self._sparse_uplink_block(core.errors, client_idx, start,
                                           flat0, client_batches, pos, rng,
                                           eta_l, k_all)
-            hats_mean = server_aggregate_sparse(vals, sidx, d, n)
             loss = jnp.mean(losses)
+            if self._fused != "off":
+                # one-pass fused ingest (DESIGN.md §3): the received
+                # (vals, idx) selections go straight into the m/v/v̂/x
+                # read-modify-write — no dense mean delta, no separate
+                # server_update pass (bit-identical at fp32 state)
+                xflat, _ = ravel_pytree(core.params)
+                new_flat, opt = server_ingest(
+                    fed, core.opt, xflat, vals, sidx, n,
+                    block=self._ingest_block, impl=self._fused)
+                x_client, server_error = server_downlink(
+                    fed, self.comp, self.codec, d, rng, new_flat,
+                    core.x_client, core.server_error)
+                new_core = _CoreState(self.unravel(new_flat), opt, errors,
+                                      server_error, x_client)
+                return new_core, {"loss": loss, "gamma": jnp.zeros(())}
+            hats_mean = server_aggregate_sparse(vals, sidx, d, n)
             mean_tot = jnp.mean(tot_rows, axis=0)
             mean_delta = jnp.mean(delta, axis=0)
         else:

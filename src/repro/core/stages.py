@@ -233,6 +233,40 @@ def resolve_mesh_sparse_impl(fed: FedConfig, kernel_impl) -> str:
             else "jnp")
 
 
+def resolve_fused_ingest(fed: FedConfig, *, eligible: bool,
+                         have_kernel: bool, compiled: bool,
+                         detail: str = "") -> str:
+    """``fed.fused_ingest`` → the ingest path that will run: ``"kernel"``
+    (Pallas ``kernels.fedams_ingest``), ``"jnp"`` (the blocked-scatter
+    fused path in ``server_opt.server_ingest_leaf``), or ``"off"`` (the
+    two-pass ``server_aggregate_sparse`` + ``server_update`` baseline).
+
+    Resolved at BUILD time, like :func:`resolve_mesh_sparse_impl`: the
+    backend passes ``eligible`` (can this round fuse at all — sparse
+    blocktopk uplink, no dense-aggregate consumers like the γ diagnostic,
+    no client chunking / state sharding) and the resolver errors on a
+    forced knob the build cannot honor instead of silently falling back.
+    ``auto`` fuses whenever eligible, picking the kernel only where it
+    compiles (TPU) — exactly the ``mesh_sparse_impl`` auto rule."""
+    knob = fed.fused_ingest
+    if knob == "off":
+        return "off"
+    if not eligible:
+        if knob in ("kernel", "jnp"):
+            raise ValueError(
+                f"FedConfig.fused_ingest={knob!r} but this round cannot "
+                f"fuse the server ingest: {detail}")
+        return "off"
+    if knob == "kernel" and not have_kernel:
+        raise ValueError(
+            "FedConfig.fused_ingest='kernel' but no kernel_impl was "
+            "supplied — pass KernelImpl() to build_fed_round "
+            "(launch/train.py: --use-kernels or --fused-ingest kernel)")
+    if knob in ("kernel", "jnp"):
+        return knob
+    return "kernel" if (have_kernel and compiled) else "jnp"
+
+
 def select_tree(select_leaf, delta, err, mask):
     """Shared select-once tree plumbing for BOTH selection providers (the
     jnp :func:`topk_select_tree` and the Pallas

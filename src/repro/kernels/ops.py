@@ -142,6 +142,16 @@ class KernelImpl:
 
     # -- fused server update ---------------------------------------------
     def fedams_update_tree(self, fed: FedConfig, st: ServerState, params, agg):
+        """Same update math as the jnp ``server_update`` for the whole
+        {fedams, fedcams, fedamsgrad} × {option 1, 2} grid (fedamsgrad IS
+        Option 2, same mapping as the jnp branches): m/v/v̂ bit-identical;
+        x within a few ulp across the two differently-shaped programs
+        (XLA may contract the x division into an FMA/rsqrt form —
+        regression-tested in tests/test_server_opt.py, which also owns
+        the same-shape bitwise gate). bf16 v/v̂ storage is dequantized by
+        the fp32 pad and requantized by the output cast — the same
+        round-trip the quantized ``server_update`` wrapper runs."""
+        option = 2 if fed.algorithm == "fedamsgrad" else fed.option
         flat_p, tdef = jax.tree_util.tree_flatten(params)
         flat_m = jax.tree_util.tree_leaves(st.m)
         flat_v = jax.tree_util.tree_leaves(st.v)
@@ -156,12 +166,26 @@ class KernelImpl:
             df, _ = _pad_flat(d, self.block)
             x2, m2, v2, vh2 = _fedams_update(
                 xf, mf, vf, vhf, df, eta=fed.eta, beta1=fed.beta1,
-                beta2=fed.beta2, eps=fed.eps, option=fed.option,
+                beta2=fed.beta2, eps=fed.eps, option=option,
                 block=self.block, interpret=self._interp)
             xs.append(x2[:n].reshape(x.shape).astype(x.dtype))
             ms.append(m2[:n].reshape(x.shape))
-            vs.append(v2[:n].reshape(x.shape))
-            vhs.append(vh2[:n].reshape(x.shape))
+            vs.append(v2[:n].reshape(x.shape).astype(v.dtype))
+            vhs.append(vh2[:n].reshape(x.shape).astype(vh.dtype))
         unf = lambda ls: jax.tree_util.tree_unflatten(tdef, ls)
         return unf(xs), ServerState(m=unf(ms), v=unf(vs), vhat=unf(vhs),
                                     t=st.t + 1)
+
+    # -- one-pass fused ingest (DESIGN.md §3) ------------------------------
+    def fedams_ingest_tree(self, fed: FedConfig, st: ServerState, params,
+                           sels, n_div, gather):
+        """Kernel-routed one-pass server ingest: per leaf, gather the
+        compacted client Selections and run ``kernels.fedams_ingest``
+        (scatter-mean + FedAMS step + state dequant/requant in one pass —
+        no dense mean delta). Same contract as
+        :func:`repro.core.server_opt.server_ingest_tree` with
+        ``impl='kernel'`` and this impl's block/interpret."""
+        from repro.core.server_opt import server_ingest_tree
+        return server_ingest_tree(fed, st, params, sels, n_div, gather,
+                                  block=self.block, impl="kernel",
+                                  interpret=self.interpret)

@@ -10,6 +10,9 @@ Semantics notes:
   * ``sign_ef_ref``: scaled sign with the *global* l1 scale (computed outside
     the kernel in one reduction pass) and fused error feedback.
   * ``fedams_update_ref``: the fused server update, Options 1 and 2.
+  * ``fedams_ingest_ref``: the one-pass sparse ingest (scatter-mean fused
+    into the FedAMS step, with dequant/requant of quantized second-moment
+    state) — the bit-identity ground truth for ``kernels.fedams_ingest``.
 """
 from __future__ import annotations
 
@@ -42,11 +45,57 @@ def fedams_update_ref(x, m, v, vhat, delta, *, eta: float, beta1: float,
                       beta2: float, eps: float, option: int = 1):
     """Fused FedAMS server update on flat fp32 vectors."""
     m2 = beta1 * m + (1 - beta1) * delta
-    v2 = beta2 * v + (1 - beta2) * delta * delta
+    v2 = beta2 * v + (1 - beta2) * jnp.square(delta)
     if option == 1:
         vh2 = jnp.maximum(jnp.maximum(vhat, v2), eps)
         x2 = x + eta * m2 / jnp.sqrt(vh2)
     else:
         vh2 = jnp.maximum(vhat, v2)
         x2 = x + eta * m2 / (jnp.sqrt(vh2) + eps)
+    return x2, m2, v2, vh2
+
+
+def fedams_ingest_ref(x, m, v, vhat, vals, idx, v_scale=None, vh_scale=None,
+                      *, n_div, eta: float, beta1: float, beta2: float,
+                      eps: float, option: int = 1, block: int = 2048,
+                      state_dtype: str = "float32"):
+    """One-pass sparse ingest oracle, same contract as ``fedams_ingest``.
+
+    The scatter accumulates client-major — a per-client loop of
+    unique-index scatter-adds, the same accumulation order as the kernel's
+    client fori_loop (kernel ≡ ref bitwise). XLA's single flat scatter-add
+    may reassociate collided updates, so vs the two-pass baseline this
+    oracle is within ≤1 ulp on collided coordinates. The elementwise
+    FedAMS step runs in fp32 with dequant/requant of the stored second
+    moments. Returns ``(x, m, v, vhat)`` (+ scales for int8).
+    """
+    n, nb, k = vals.shape
+    N = x.shape[0]
+    acc = jnp.zeros(N, jnp.float32)
+    for j in range(n):   # client-major; within a client indices are unique
+        acc = acc.at[idx[j].reshape(-1)].add(vals[j].reshape(-1))
+    d = acc / n_div
+    if state_dtype == "int8":
+        vv = (v.astype(jnp.float32).reshape(nb, block)
+              * v_scale[:, None]).reshape(-1)
+        vh = (vhat.astype(jnp.float32).reshape(nb, block)
+              * vh_scale[:, None]).reshape(-1)
+    else:
+        vv = v.astype(jnp.float32)
+        vh = vhat.astype(jnp.float32)
+    x2, m2, v2, vh2 = fedams_update_ref(x, m, vv, vh, d, eta=eta,
+                                        beta1=beta1, beta2=beta2, eps=eps,
+                                        option=option)
+    if state_dtype == "int8":
+        def requant(a):
+            ab = a.reshape(nb, block)
+            scale = jnp.maximum(jnp.max(jnp.abs(ab), axis=1) / 127.0, 1e-30)
+            q = jnp.clip(jnp.round(ab / scale[:, None]), -127,
+                         127).astype(jnp.int8)
+            return q.reshape(-1), scale
+        qv, sv = requant(v2)
+        qvh, svh = requant(vh2)
+        return x2, m2, qv, qvh, sv, svh
+    if state_dtype == "bfloat16":
+        return x2, m2, v2.astype(jnp.bfloat16), vh2.astype(jnp.bfloat16)
     return x2, m2, v2, vh2

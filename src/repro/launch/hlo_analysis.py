@@ -22,6 +22,29 @@ Conventions (held fixed so §Perf deltas are comparable):
         buffer is counted at the call site).
   * Collectives: payload = output bytes (tuple outputs summed), multiplied
     by loop trip counts like everything else.
+
+A second, additive accounting — ``rw_bytes`` — models total HBM
+read+write traffic (reads AND writes both charged), for bandwidth-bound
+memory-stream comparisons like the fused-vs-two-pass server ingest
+(benchmarks/bench_rounds.py ``server_ingest``). The historic ``bytes``
+field is untouched so §Perf deltas stay comparable. rw conventions:
+  * skipped ops (parameter/constant/get-tuple-element/bitcast/tuple/
+    after-all): 0 — no scheduled traffic;
+  * dynamic-update-slice: r + w = 2 × update-slice bytes (aliased);
+  * dynamic-slice: r + w = 2 × output bytes (only the slice moves);
+  * dot: r = operand bytes, w = output bytes;
+  * reduce: r = first-operand bytes, w = output bytes;
+  * fusion: loop-aware. Outside any while loop the site charges
+    w = output bytes (or the dus alias) + r = Σ operand buffer bytes
+    resolved through the symbol table. Inside a while body it charges
+    the callee's internal slice/update traffic instead — scatter-style
+    loop bodies keep their operands resident and touch a few elements
+    per trip, so flat operand charging would multiply whole buffers by
+    the trip count;
+  * custom-call/call without a resolvable callee: w = output,
+    r = Σ operands;
+  * collectives: r = w = payload;
+  * everything else scheduled: w = output bytes, r = Σ operand bytes.
 """
 from __future__ import annotations
 
@@ -65,12 +88,20 @@ class Call:
     callee: str
     kind: str            # fusion | call | while_body | while_cond | branch
     trip: int = 1
+    # rw charge candidates for fusion call sites, picked at resolve time:
+    # flat = output (or dus alias) + Σ operand buffers — right when the
+    # fusion runs once and streams its operands; slice = the callee body's
+    # internal slice/update traffic — right inside a while loop, where the
+    # operands stay resident and each trip touches a few elements.
+    rw_flat: float = 0.0
+    rw_slice: float = 0.0
 
 
 @dataclass
 class CompCost:
     flops: float = 0.0
     bytes: float = 0.0
+    rw_bytes: float = 0.0
     coll: Dict[str, float] = field(default_factory=dict)
     coll_count: Dict[str, int] = field(default_factory=dict)
     calls: List[Call] = field(default_factory=list)
@@ -87,11 +118,24 @@ class HloCost:
     bytes: float
     coll_bytes: Dict[str, float]
     coll_count: Dict[str, int]
+    rw_bytes: float = 0.0
 
     @property
     def weighted_coll_bytes(self) -> float:
         return sum(b * (2.0 if k == "all-reduce" else 1.0)
                    for k, b in self.coll_bytes.items())
+
+
+def _operand_bytes(rest: str, symtab: Dict[str, List[Tuple[str, str]]]) -> int:
+    """Σ buffer bytes of every %operand that resolves in the symbol table
+    (callee/computation references aren't instruction names, so they drop
+    out naturally)."""
+    total = 0
+    for a in re.findall(r"%([\w\.\-]+)", rest):
+        bufs = symtab.get(a)
+        if bufs:
+            total += sum(_buf_bytes(d, s) for d, s in bufs)
+    return total
 
 
 def _parse_out_bufs(rhs: str) -> Tuple[List[Tuple[str, str]], str]:
@@ -165,6 +209,7 @@ def parse_hlo(text: str) -> Dict[str, CompCost]:
             cc.coll[base_op] = cc.coll.get(base_op, 0.0) + payload
             cc.coll_count[base_op] = cc.coll_count.get(base_op, 0) + 1
             cc.bytes += out_bytes
+            cc.rw_bytes += 2.0 * payload
             continue
         if op.endswith("-done"):
             continue
@@ -205,6 +250,7 @@ def parse_hlo(text: str) -> Dict[str, CompCost]:
             out_elems = sum(_shape_elems(s) for _, s in bufs)
             cc.flops += 2.0 * out_elems * contracted
             cc.bytes += out_bytes + operand_bytes
+            cc.rw_bytes += out_bytes + operand_bytes
             continue
 
         if op == "dynamic-update-slice":
@@ -215,17 +261,26 @@ def parse_hlo(text: str) -> Dict[str, CompCost]:
             ub = sum(_buf_bytes(d, s) for d, s in upd) if upd else 0
             dus_bytes[name] = ub
             cc.bytes += ub
+            cc.rw_bytes += 2.0 * ub
             if m.group(1):  # ROOT dus => fusion output aliased
                 cc.out_alias_bytes = ub
+            continue
+
+        if op == "dynamic-slice":
+            # only the slice moves: r = w = output bytes
+            if out_bytes <= 4096:
+                small_ops[name] = float(out_bytes)
+            cc.bytes += out_bytes
+            cc.rw_bytes += 2.0 * out_bytes
             continue
 
         if op == "reduce":
             args = re.findall(r"%([\w\.\-]+)",
                               rest[len(op) + 1:rest.find(")")])
             first = symtab.get(args[0]) if args else None
-            if first:
-                cc.bytes += sum(_buf_bytes(d, s) for d, s in first)
-            cc.bytes += out_bytes
+            fb = sum(_buf_bytes(d, s) for d, s in first) if first else 0
+            cc.bytes += fb + out_bytes
+            cc.rw_bytes += fb + out_bytes
             continue
 
         if op == "while":
@@ -250,6 +305,17 @@ def parse_hlo(text: str) -> Dict[str, CompCost]:
                 cc.calls.append(Call(fm.group(1), "fusion", 1))
                 alias = callee.out_alias_bytes
             cc.bytes += out_bytes if alias is None else alias
+            if fm:
+                # rw is charged at resolve time: flat (operands + output)
+                # when this site runs outside any while loop, slice-level
+                # (the callee's internal ds/dus traffic) inside one — loop
+                # bodies keep their operands resident across trips
+                site = cc.calls[-1]
+                site.rw_flat = ((out_bytes if alias is None else alias)
+                                + _operand_bytes(rest, symtab))
+                site.rw_slice = callee.rw_bytes
+            else:
+                cc.rw_bytes += out_bytes + _operand_bytes(rest, symtab)
             continue
 
         if op == "conditional":
@@ -257,12 +323,14 @@ def parse_hlo(text: str) -> Dict[str, CompCost]:
                                  rest[rest.find("branch_computations"):]) or []:
                 cc.calls.append(Call(br, "branch", 1))
             cc.bytes += out_bytes
+            cc.rw_bytes += out_bytes
             continue
 
         # reduce/sort/map to_apply bodies are scalar lambdas — skip linking
         if out_bytes <= 4096:
             small_ops[name] = float(out_bytes)
         cc.bytes += out_bytes
+        cc.rw_bytes += out_bytes + _operand_bytes(rest, symtab)
 
     # mark fused computations (their own bytes are not scheduled memory)
     for c in comps.values():
@@ -277,34 +345,49 @@ def parse_hlo(text: str) -> Dict[str, CompCost]:
 
 def resolve_cost(comps: Dict[str, CompCost]) -> HloCost:
     entry = comps.get("__entry_name__")
-    memo: Dict[str, Tuple[float, float, Dict[str, float], Dict[str, int]]] = {}
+    memo: Dict[Tuple[str, bool],
+               Tuple[float, float, float,
+                     Dict[str, float], Dict[str, int]]] = {}
 
-    def visit(name: str, stack=()) -> Tuple[float, float, Dict[str, float], Dict[str, int]]:
-        if name in memo:
-            return memo[name]
+    def visit(name: str, stack=(), in_loop: bool = False
+              ) -> Tuple[float, float, float,
+                         Dict[str, float], Dict[str, int]]:
+        key = (name, in_loop)
+        if key in memo:
+            return memo[key]
         if name in stack or name not in comps or name.startswith("__"):
-            return 0.0, 0.0, {}, {}
+            return 0.0, 0.0, 0.0, {}, {}
         c = comps[name]
         flops = c.flops
         byts = 0.0 if c.fused else c.bytes
+        # fused bodies keep intermediates in registers/VMEM: their rw
+        # traffic is charged at the fusion call site, not here
+        rw = 0.0 if c.fused else c.rw_bytes
         coll = dict(c.coll)
         cnt = dict(c.coll_count)
         for call in c.calls:
-            f, b, co, cn = visit(call.callee, stack + (name,))
+            child_loop = (in_loop
+                          or call.kind in ("while_body", "while_cond"))
+            f, b, r, co, cn = visit(call.callee, stack + (name,),
+                                    child_loop)
             mult = call.trip
             flops += f * mult
             byts += b * mult
+            rw += r * mult
+            if call.kind == "fusion":
+                rw += (call.rw_slice if in_loop else call.rw_flat) * mult
             for k, v in co.items():
                 coll[k] = coll.get(k, 0.0) + v * mult
             for k, v in cn.items():
                 cnt[k] = cnt.get(k, 0) + v * mult
-        memo[name] = (flops, byts, coll, cnt)
-        return memo[name]
+        memo[key] = (flops, byts, rw, coll, cnt)
+        return memo[key]
 
     if not isinstance(entry, str):
         return HloCost(0.0, 0.0, {}, {})
-    f, b, co, cn = visit(entry)
-    return HloCost(flops=f, bytes=b, coll_bytes=co, coll_count=cn)
+    f, b, r, co, cn = visit(entry)
+    return HloCost(flops=f, bytes=b, coll_bytes=co, coll_count=cn,
+                   rw_bytes=r)
 
 
 def analyze(text: str) -> HloCost:

@@ -8,12 +8,53 @@ import — see launch/dryrun.py).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+
 import jax
 
-# TPU v5e roofline constants (per chip)
-PEAK_FLOPS_BF16 = 197e12       # FLOP/s
-HBM_BW = 819e9                 # B/s
-ICI_BW_PER_LINK = 50e9         # B/s per link
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Per-chip roofline constants for one accelerator backend."""
+    name: str
+    peak_flops_bf16: float     # FLOP/s
+    hbm_bw: float              # B/s
+    ici_bw_per_link: float     # B/s per link (host interconnect for cpu)
+
+
+#: Known backends. The numbers are per chip; ``cpu`` is a rough stand-in
+#: for the container host (measurements on it are relative, not absolute).
+BACKEND_SPECS = {
+    "tpu_v5e": BackendSpec("tpu_v5e", peak_flops_bf16=197e12,
+                           hbm_bw=819e9, ici_bw_per_link=50e9),
+    "tpu_v4": BackendSpec("tpu_v4", peak_flops_bf16=275e12,
+                          hbm_bw=1228e9, ici_bw_per_link=100e9),
+    "cpu": BackendSpec("cpu", peak_flops_bf16=2e12,
+                       hbm_bw=50e9, ici_bw_per_link=10e9),
+}
+
+DEFAULT_BACKEND = "tpu_v5e"
+
+
+def backend_spec(name: str | None = None) -> BackendSpec:
+    """Resolve a :class:`BackendSpec` by name; ``None`` reads the
+    ``REPRO_BACKEND`` env var and falls back to ``tpu_v5e`` (the paper's
+    reference part, and the historical hardwired constants)."""
+    name = name or os.environ.get("REPRO_BACKEND") or DEFAULT_BACKEND
+    try:
+        return BACKEND_SPECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}: pick one of "
+            f"{sorted(BACKEND_SPECS)} (or extend BACKEND_SPECS)") from None
+
+
+# Back-compat module constants (tpu_v5e): existing call sites and §Perf
+# numbers keep their historical meaning.
+PEAK_FLOPS_BF16 = BACKEND_SPECS["tpu_v5e"].peak_flops_bf16
+HBM_BW = BACKEND_SPECS["tpu_v5e"].hbm_bw
+ICI_BW_PER_LINK = BACKEND_SPECS["tpu_v5e"].ici_bw_per_link
 
 
 def _mesh_kwargs(n_axes: int) -> dict:

@@ -2,9 +2,15 @@
 
 Three terms per (arch × shape × mesh), per the brief:
 
-    compute    = HLO_FLOPs_per_chip / 197e12          (bf16 peak, v5e)
-    memory     = HLO_bytes_per_chip / 819e9           (HBM bandwidth)
-    collective = Σ collective_bytes × factor / 50e9   (ICI per link)
+    compute    = HLO_FLOPs_per_chip / peak_flops_bf16
+    memory     = HLO_bytes_per_chip / hbm_bw
+    collective = Σ collective_bytes × factor / ici_bw_per_link
+
+The bandwidth/peak constants come from a :class:`~repro.launch.mesh.
+BackendSpec` (``launch.mesh.BACKEND_SPECS``); the default is tpu_v5e
+(197e12 / 819e9 / 50e9 — the paper's reference part and the historical
+hardwired numbers), overridable per call via ``spec=`` or globally via
+the ``REPRO_BACKEND`` env var.
 
 ``cost_analysis()`` is the per-device SPMD program, so its flops/bytes are
 already per-chip. Collective bytes are parsed from the compiled HLO: the sum
@@ -20,7 +26,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict
 
-from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK,  # noqa: F401
+                               PEAK_FLOPS_BF16, BackendSpec, backend_spec)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -104,24 +111,33 @@ def model_flops_for(cfg, shape_kind: str, tokens: float, local_steps: int = 1):
     return 2.0 * n_active * tokens
 
 
-def roofline_from_hlo(hc, *, chips: int, model_flops: float) -> Roofline:
-    """Preferred path: trip-count-aware HloCost from launch.hlo_analysis."""
+def roofline_from_hlo(hc, *, chips: int, model_flops: float,
+                      spec: BackendSpec | None = None) -> Roofline:
+    """Preferred path: trip-count-aware HloCost from launch.hlo_analysis.
+
+    ``spec`` selects the backend bandwidth/peak constants; ``None`` keeps
+    the default resolution (``REPRO_BACKEND`` env var, else tpu_v5e — the
+    historical hardwired numbers)."""
     return _mk_roofline(hc.flops, hc.bytes, hc.weighted_coll_bytes,
-                        chips=chips, model_flops=model_flops)
+                        chips=chips, model_flops=model_flops, spec=spec)
 
 
 def roofline_from(cost: Dict, stats: CollectiveStats, *, chips: int,
-                  model_flops: float) -> Roofline:
+                  model_flops: float,
+                  spec: BackendSpec | None = None) -> Roofline:
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     coll = stats.weighted_bytes
-    return _mk_roofline(flops, hbm, coll, chips=chips, model_flops=model_flops)
+    return _mk_roofline(flops, hbm, coll, chips=chips,
+                        model_flops=model_flops, spec=spec)
 
 
-def _mk_roofline(flops, hbm, coll, *, chips: int, model_flops: float) -> Roofline:
-    compute_s = flops / PEAK_FLOPS_BF16
-    memory_s = hbm / HBM_BW
-    collective_s = coll / ICI_BW_PER_LINK
+def _mk_roofline(flops, hbm, coll, *, chips: int, model_flops: float,
+                 spec: BackendSpec | None = None) -> Roofline:
+    spec = spec or backend_spec()
+    compute_s = flops / spec.peak_flops_bf16
+    memory_s = hbm / spec.hbm_bw
+    collective_s = coll / spec.ici_bw_per_link
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     dominant = max(terms, key=terms.get)

@@ -41,6 +41,20 @@ def main(argv=None) -> None:
                          "where it compiles (TPU), jnp elsewhere. NB "
                          "forcing 'kernel' implies --use-kernels (the "
                          "whole KernelImpl: fused server update + EF too)")
+    ap.add_argument("--fused-ingest", default="auto",
+                    choices=("auto", "kernel", "jnp", "off"),
+                    help="one-pass fused server ingest (DESIGN.md §3): "
+                         "scatter-mean + FedAMS update in a single "
+                         "read-modify-write over optimizer state, no "
+                         "dense mean delta. auto = fuse where the round "
+                         "is eligible (sparse blocktopk aggregation), "
+                         "kernel Pallas where it compiles (TPU). NB "
+                         "forcing 'kernel' implies --use-kernels")
+    ap.add_argument("--server-state-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="server second-moment (v, v̂) storage dtype; "
+                         "bf16 halves optimizer-state HBM residency "
+                         "(int8-blockscale is FedSim-only)")
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--local-opt", default="sgd",
                     choices=("sgd", "sgdm", "prox"),
@@ -94,6 +108,8 @@ def main(argv=None) -> None:
     fed = FedConfig(algorithm=args.algorithm, compressor=args.compressor,
                     compress_ratio=args.ratio, aggregation=args.aggregation,
                     mesh_sparse_impl=args.mesh_sparse_impl,
+                    fused_ingest=args.fused_ingest,
+                    server_state_dtype=args.server_state_dtype,
                     local_steps=args.local_steps, num_clients=num_clients,
                     local_opt=args.local_opt,
                     local_momentum=args.local_momentum,
@@ -113,7 +129,8 @@ def main(argv=None) -> None:
     # KernelImpl — build_fed_round then also routes the server update and
     # dense-path EF through the fused kernels, exactly as --use-kernels
     kernel_impl = (KernelImpl() if args.use_kernels
-                   or args.mesh_sparse_impl == "kernel" else None)
+                   or args.mesh_sparse_impl == "kernel"
+                   or args.fused_ingest == "kernel" else None)
     rnd = build_fed_round(model, fed, train, ctx, kernel_impl=kernel_impl)
     sdefs = fed_state_defs(model, fed)
     state_specs = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)

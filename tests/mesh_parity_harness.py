@@ -68,6 +68,20 @@ CASES = {
     "blocktopk_kernel": dict(algorithm="fedcams", compressor="blocktopk",
                              aggregation="sparse",
                              mesh_sparse_impl="kernel"),
+    # one-pass fused server ingest (DESIGN.md §3): the gathered (vals, idx)
+    # go straight into the m/v/v̂/x update with no dense mean delta. Both
+    # sides run the SAME provider (jnp blocked scatter / Pallas
+    # fedams_ingest), so the pair stays bitwise comparable; track_gamma off
+    # because the γ diagnostic consumes the dense aggregate the fused path
+    # never builds.
+    "blocktopk_fused": dict(algorithm="fedcams", compressor="blocktopk",
+                            aggregation="sparse", fused_ingest="jnp",
+                            track_gamma=False),
+    "blocktopk_fused_kernel": dict(algorithm="fedcams",
+                                   compressor="blocktopk",
+                                   aggregation="sparse",
+                                   fused_ingest="kernel",
+                                   track_gamma=False),
 }
 
 
@@ -172,9 +186,11 @@ def _run_sim(fed, rounds_targets):
 def _select_only_kernel_impl():
     """A KernelImpl that serves ONLY the sparse-uplink selection: the
     server update stays on the shared jnp ``server_update`` (passing a
-    full KernelImpl also swaps in the fused Pallas FedAMS server kernel,
-    whose different-but-equivalent op grouping costs ~1 ulp/round — a
-    deviation tests/test_kernels.py owns, not this uplink harness)."""
+    full KernelImpl also swaps in the Pallas FedAMS server kernel — same
+    update math, but XLA may compile its x division with a different
+    FMA/rsqrt contraction than the sim's differently-shaped program, a
+    few ulp that tests/test_server_opt.py owns, not this uplink
+    harness)."""
     from repro.core.server_opt import server_update
     from repro.kernels.ops import KernelImpl
 
@@ -201,7 +217,16 @@ def run_case(name: str, wire: bool) -> list:
     fed_sim = FedConfig(client_axes=(), wire=wire, **sim_kw, **common)
 
     targets = [_round_targets(r) for r in range(R)]
-    ki = _select_only_kernel_impl() if mesh_impl == "kernel" else None
+    # fused_ingest="kernel" needs the FULL KernelImpl on the mesh side (the
+    # ingest kernel replaces the server update entirely, so the
+    # select-only shim's jnp fallback never runs); the select-only shim
+    # serves the mesh_sparse_impl="kernel" case, where only the selection
+    # should come from Pallas.
+    if kw.get("fused_ingest") == "kernel":
+        from repro.kernels.ops import KernelImpl
+        ki = KernelImpl()
+    else:
+        ki = _select_only_kernel_impl() if mesh_impl == "kernel" else None
     mesh_rounds = _run_mesh(fed_mesh, targets, ki)
     sim_rounds = _run_sim(fed_sim, targets)
 

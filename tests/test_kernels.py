@@ -75,6 +75,34 @@ def test_fedams_update_matches_ref(option, n, block):
                                    atol=1e-6, err_msg=nm)
 
 
+@given(st.integers(0, 10**6), st.sampled_from([128, 256]),
+       st.integers(1, 127))
+def test_fedams_update_ragged_tail_property(seed, block, tail):
+    """d % block != 0 goes through the pad-and-slice path: outputs keep the
+    unpadded length and match the jitted jnp reference — m/v/v̂ bitwise
+    (the zero pad lanes can't leak into real lanes); x gets a tiny
+    tolerance: the multi-block interpret grid may compile the x division
+    with a contracted FMA/rsqrt form (a few ulp of the increment), and
+    tests/test_server_opt.py owns the single-block bitwise gate on x."""
+    n = 2 * block + tail
+    r = np.random.default_rng(seed)
+    arrs = [jnp.asarray(np.abs(r.normal(size=n)) if i in (2, 3)
+                        else r.normal(size=n), jnp.float32)
+            for i in range(5)]
+    for option in (1, 2):
+        kw = dict(eta=0.7, beta1=0.9, beta2=0.99, eps=1e-3, option=option)
+        got = fedams_update(*arrs, block=block, **kw)
+        want = jax.jit(lambda *a: ref.fedams_update_ref(*a, **kw))(*arrs)
+        for g, w, nm in zip(got, want, "x m v vhat".split()):
+            assert g.shape == (n,), (nm, g.shape)
+            if nm == "x":
+                np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                           rtol=1e-6, atol=1e-6)
+            else:
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                              err_msg=f"{nm} option={option}")
+
+
 @given(st.integers(0, 10**6))
 def test_fedams_kernel_vhat_monotone(seed):
     r = np.random.default_rng(seed)

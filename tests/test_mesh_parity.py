@@ -7,7 +7,8 @@ that a permanent fixture instead of per-PR spot checks:
 * **Paired runs** (``tests/mesh_parity_harness.py`` under a forced
   8-device subprocess via ``conftest.run_forced_devices``): identical
   configs across (dense, topk, blocktopk, packedsign, kernel-routed
-  blocktopk) × (wire on/off), three rounds each. Per-client EF state is
+  blocktopk, fused one-pass ingest jnp + kernel) × (wire on/off), three
+  rounds each. Per-client EF state is
   asserted BIT-identical — which is also the per-round selection-equality
   proof: the EF residual is ``tot`` with exactly the selected coordinates
   zeroed, so differing selections would disagree wherever ``tot ≠ 0``.
@@ -68,7 +69,8 @@ def parity():
 
 
 CASE_NAMES = ["dense", "topk", "blocktopk", "packedsign",
-              "blocktopk_kernel"]
+              "blocktopk_kernel", "blocktopk_fused",
+              "blocktopk_fused_kernel"]
 
 
 @pytest.mark.slow

@@ -73,6 +73,88 @@ def test_option2_matches_amsgrad_reference():
         assert np.allclose(np.asarray(xj), x, atol=1e-5)
 
 
+def test_kernel_update_bitwise_vs_server_update_flat():
+    """Regression gate for the kernel server step's MATH:
+    ``kernels.fedams_update`` is BIT-IDENTICAL to the jnp ``server_update``
+    across {fedams, fedamsgrad, fedcams} x {option 1, 2} on all four state
+    arrays over multiple steps — incl. the eps-max ordering split (option 1
+    folds eps into the v̂ max and divides by √v̂; option 2 adds eps after
+    the √), the fedamsgrad-IS-option-2 mapping, the true-division x update
+    (a rsqrt multiply deviates here immediately), and the
+    ``(1-β₂)·(δ·δ)`` association of the v update (``jnp.square``, matching
+    the jnp branches — the left-associated ``(1-β₂)·δ·δ`` is 1 ulp off).
+    Both sides run jitted at the same (single-block) shape so XLA makes
+    identical contraction choices."""
+    from repro.kernels.fedams_update import fedams_update
+
+    r = np.random.default_rng(11)
+    n = 4096
+    for algo in ("fedams", "fedamsgrad", "fedcams"):
+        for option in (1, 2):
+            fed = dataclasses.replace(_mk(algo, eta=0.7), option=option)
+            opt_k = 2 if algo == "fedamsgrad" else option
+            x = jnp.asarray(r.normal(size=n), jnp.float32)
+            st = init_server_state(x)
+            upd = jax.jit(lambda s, xx, d, fed=fed: server_update(fed, s,
+                                                                  xx, d))
+            xj, (xk, m, v, vh) = x, (x, st.m, st.v, st.vhat)
+            for step in range(4):
+                delta = jnp.asarray(r.normal(size=n) * 0.1, jnp.float32)
+                xj, st = upd(st, xj, delta)
+                xk, m, v, vh = fedams_update(
+                    xk, m, v, vh, delta, eta=0.7, beta1=fed.beta1,
+                    beta2=fed.beta2, eps=fed.eps, option=opt_k, block=n)
+                for name, a, b in (("x", xj, xk), ("m", st.m, m),
+                                   ("v", st.v, v), ("vhat", st.vhat, vh)):
+                    np.testing.assert_array_equal(
+                        np.asarray(a), np.asarray(b),
+                        err_msg=f"{algo} opt{option} step{step} {name}")
+
+
+def test_kernel_update_tree_parity_vs_server_update():
+    """``KernelImpl.fedams_update_tree`` vs jnp ``server_update`` on a
+    multi-leaf tree (padding + t counter exercised), both jitted:
+    m/v/v̂ stay bitwise; x gets a tiny tolerance — across the two
+    differently-shaped programs (padded flat blocks vs raw leaf shapes)
+    XLA CPU may compile the x division with a contracted FMA/rsqrt form,
+    a few ulp of each increment that accumulates in the carried x.
+    The update-math bitwise gate is the flat test above."""
+    from repro.kernels.ops import KernelImpl
+
+    ki = KernelImpl(block=128)
+    r = np.random.default_rng(11)
+    params = {"w": jnp.asarray(r.normal(size=(10, 30)), jnp.float32),
+              "b": jnp.asarray(r.normal(size=5), jnp.float32)}
+    for algo in ("fedams", "fedamsgrad"):
+        for option in (1, 2):
+            fed = dataclasses.replace(_mk(algo, eta=0.7), option=option)
+            st_j = init_server_state(params)
+            st_k = init_server_state(params)
+            xj = xk = params
+            upd_j = jax.jit(lambda s, x, d, fed=fed: server_update(
+                fed, s, x, d))
+            upd_k = jax.jit(lambda s, x, d, fed=fed: ki.fedams_update_tree(
+                fed, s, x, d))
+            for step in range(6):
+                delta = jax.tree.map(
+                    lambda p: jnp.asarray(
+                        r.normal(size=p.shape) * 0.1, jnp.float32), params)
+                xj, st_j = upd_j(st_j, xj, delta)
+                xk, st_k = upd_k(st_k, xk, delta)
+                for name, a, b in (("m", st_j.m, st_k.m),
+                                   ("v", st_j.v, st_k.v),
+                                   ("vhat", st_j.vhat, st_k.vhat)):
+                    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                        np.testing.assert_array_equal(
+                            np.asarray(la), np.asarray(lb),
+                            err_msg=f"{algo} opt{option} step{step} {name}")
+                for la, lb in zip(jax.tree.leaves(xj), jax.tree.leaves(xk)):
+                    np.testing.assert_allclose(
+                        np.asarray(la), np.asarray(lb),
+                        rtol=1e-6, atol=1e-6)
+            assert int(st_k.t) == int(st_j.t)
+
+
 def test_fedyogi_differs_from_fedadam():
     a = _steps(_mk("fedadam"), T=5, seed=3)[-1][0]
     y = _steps(_mk("fedyogi"), T=5, seed=3)[-1][0]
