@@ -3,10 +3,18 @@
 ``CommLog`` accumulates the measured per-round transport numbers (bytes on
 the wire both directions, simulated wall-clock) that ``FedSim``'s wire mode
 surfaces into ``FederatedTrainer.history`` — the measured counterpart of
-the analytic ``bits`` counter the paper plots."""
+the analytic ``bits`` counter the paper plots.
+
+With two-level aggregation (``FedConfig.agg_groups > 1``, DESIGN.md
+§scale-out) the uplink is billed per tier: tier 1 is the n client messages
+(the codec bytes the transport times), tier 2 the g dense group partials
+pushed to the root. ``wire_up_bytes`` then bills the tiers that actually
+run (tier 1 + tier 2); the per-tier split is kept in
+``wire_tier1_bytes`` / ``wire_tier2_bytes``.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.comm.transport import RoundTiming
 
@@ -14,25 +22,29 @@ from repro.comm.transport import RoundTiming
 @dataclass
 class CommLog:
     rounds: int = 0
-    uplink_bytes: int = 0
+    uplink_bytes: int = 0      # tier 1: client -> (group | server) messages
+    edge_bytes: int = 0        # tier 2: group partial -> root (0 when flat)
     downlink_bytes: int = 0
     sim_time_s: float = 0.0
 
     @property
     def total_bytes(self) -> int:
-        return self.uplink_bytes + self.downlink_bytes
+        return self.uplink_bytes + self.edge_bytes + self.downlink_bytes
 
-    def add(self, timing: RoundTiming) -> None:
+    def add(self, timing: RoundTiming, tier2_bytes: int = 0) -> None:
         self.rounds += 1
         self.uplink_bytes += timing.uplink_bytes
+        self.edge_bytes += tier2_bytes
         self.downlink_bytes += timing.downlink_bytes
         self.sim_time_s += timing.round_time_s
 
-    def record(self, timing: RoundTiming) -> dict:
+    def record(self, timing: RoundTiming, tier2_bytes: int = 0) -> dict:
         """Add one round and return the history entries for it."""
-        self.add(timing)
+        self.add(timing, tier2_bytes)
         return {
-            "wire_up_bytes": timing.uplink_bytes,
+            "wire_up_bytes": timing.uplink_bytes + tier2_bytes,
+            "wire_tier1_bytes": timing.uplink_bytes,
+            "wire_tier2_bytes": tier2_bytes,
             "wire_down_bytes": timing.downlink_bytes,
             "wire_bytes": self.total_bytes,
             "round_time_s": timing.round_time_s,

@@ -55,32 +55,51 @@ class RoundTiming:
 
 
 class SimulatedNetwork:
-    """Per-client link state + per-round timing draws (deterministic)."""
+    """Per-client link state + per-round timing draws (deterministic).
+
+    Link draws are LAZY over the participating index set (DESIGN.md
+    §scale-out): each client's fixed bandwidth pair is drawn on first
+    participation, keyed by ``(cfg.seed, client_id)`` and cached — so a
+    client keeps its link across rounds, the draw is independent of
+    participation order, two networks sharing a seed agree per client, and
+    constructing a network for m = 10^6 clients allocates nothing."""
 
     def __init__(self, cfg: NetworkConfig, num_clients: int):
         self.cfg = cfg
         self.num_clients = num_clients
-        rng = np.random.default_rng(cfg.seed)
-        # fixed per-client heterogeneity: a client on a bad link stays on it
-        lognorm = np.exp(rng.normal(-0.5 * cfg.bandwidth_sigma ** 2,
-                                    cfg.bandwidth_sigma, num_clients))
-        self.up_bps = cfg.uplink_mbps * 1e6 / 8.0 * lognorm
-        lognorm_d = np.exp(rng.normal(-0.5 * cfg.bandwidth_sigma ** 2,
-                                      cfg.bandwidth_sigma, num_clients))
-        self.down_bps = cfg.downlink_mbps * 1e6 / 8.0 * lognorm_d
+        self._links: dict = {}  # client id -> (up_bps, down_bps)
+
+    def _links_for(self, idx: np.ndarray):
+        """Fixed per-client heterogeneity for the given clients: a client
+        on a bad link stays on it (cached, keyed by (seed, id))."""
+        cfg = self.cfg
+        up = np.empty(idx.size)
+        down = np.empty(idx.size)
+        mu = -0.5 * cfg.bandwidth_sigma ** 2
+        for j, c in enumerate(idx):
+            got = self._links.get(int(c))
+            if got is None:
+                rng = np.random.default_rng((cfg.seed, int(c)))
+                lu, ld = np.exp(rng.normal(mu, cfg.bandwidth_sigma, 2))
+                got = self._links[int(c)] = (
+                    cfg.uplink_mbps * 1e6 / 8.0 * lu,
+                    cfg.downlink_mbps * 1e6 / 8.0 * ld)
+            up[j], down[j] = got
+        return up, down
 
     def round(self, client_idx: Sequence[int], uplink_bytes_per_client: int,
               downlink_bytes_per_client: int, round_idx: int) -> RoundTiming:
         cfg = self.cfg
         idx = np.asarray(client_idx, np.int64)
         n = idx.size
+        up_bps, down_bps = self._links_for(idx)
         rng = np.random.default_rng((cfg.seed + 1) * 1_000_003 + round_idx)
         latency = np.maximum(
             rng.normal(cfg.latency_ms, cfg.latency_jitter_ms, n), 1.0) / 1e3
         slow = np.where(rng.random(n) < cfg.straggler_prob,
                         cfg.straggler_slowdown, 1.0)
-        t_down = latency + downlink_bytes_per_client / self.down_bps[idx]
-        t_up = latency + uplink_bytes_per_client / self.up_bps[idx]
+        t_down = latency + downlink_bytes_per_client / down_bps
+        t_up = latency + uplink_bytes_per_client / up_bps
         per_client = slow * (t_down + cfg.compute_s + t_up)
         worst = int(np.argmax(per_client)) if n else -1
         return RoundTiming(

@@ -310,6 +310,27 @@ class FedConfig:
     # chunks of this many clients (lax.scan over n/client_chunk chunks), so
     # peak delta memory is (client_chunk, d) instead of (n, d). 0 = off.
     client_chunk: int = 0
+    # -- million-client scale-out (DESIGN.md §scale-out) -------------------
+    # FedSim: hold the per-client EF error rows host-side in a lazily
+    # materialized shard store (checkpoint.store.EFStore) instead of the
+    # device-resident (m, d) buffer. Each round gathers only the
+    # participating cohort's rows to device and scatters them back after
+    # the uplink, so peak device memory is (participating, d) not (m, d) —
+    # the enabler for m = 10^6. Loss is bit-identical to the resident
+    # buffer (same rows, same math; tests/test_scale_out.py). FedSim-only:
+    # the mesh backend already shards EF over the client axes.
+    ef_store: bool = False
+    # Two-level hierarchical sparse aggregation: clients are partitioned
+    # into this many groups; each group pre-merges its members' compacted
+    # (vals, idx) selections into a dense partial (tier 1, the existing
+    # blocked scatter) and the root consumes the g group partials (tier 2)
+    # instead of n client messages. 1 = flat (bit-identical to before).
+    # Requires the sparse (vals, idx) pipeline (topk/blocktopk family); on
+    # the mesh the FIRST client axis is the group axis. The aggregate
+    # matches flat up to ≤1-ulp reassociation on coordinates selected by
+    # clients in several groups (the PR-4 collision analysis, now across
+    # group partials — tests/test_mesh_parity.py).
+    agg_groups: int = 1
     client_axes: Tuple[str, ...] = ("data",)   # mesh axes that enumerate clients
     use_kernels: bool = False      # use Pallas kernels for compress+server update
     # ZeRO-style sharding of the server optimizer state (m, v, v_hat) over
@@ -361,6 +382,21 @@ class FedConfig:
             raise ValueError(
                 f"FedConfig.local_steps_min={self.local_steps_min} must be "
                 f"in [0, local_steps={self.local_steps}]")
+        if self.agg_groups < 1:
+            raise ValueError(
+                f"FedConfig.agg_groups={self.agg_groups} must be >= 1")
+        if self.agg_groups > 1:
+            if self.compressor not in ("topk", "blocktopk"):
+                raise ValueError(
+                    f"FedConfig.agg_groups={self.agg_groups} requires the "
+                    f"sparse (vals, idx) pipeline — a (value, index) "
+                    f"compressor (topk/blocktopk), got {self.compressor!r}")
+            n_round = self.participating or self.num_clients
+            if n_round % self.agg_groups:
+                raise ValueError(
+                    f"FedConfig.agg_groups={self.agg_groups} must divide "
+                    f"the per-round client count n={n_round} — ragged "
+                    f"groups would silently skew the tier-1 partials")
 
 
 @dataclass(frozen=True)

@@ -183,23 +183,36 @@ def leaf_wire_bytes(fed: FedConfig, dl: int, block: int = 2048) -> int:
     sparse aggregation with a compressor that has no compacted form) is
     billed as the dense psum it actually runs:
 
-    * ``sparse_topk``  — the gathered Selection: an int32 global index +
-      fp32 value per kept coordinate (8 bytes each), ``nb·kb`` entries in
-      the leaf's padded block layout — exactly the two arrays
-      ``stages.sparse_topk_leaf`` all_gathers (regression-tested against
-      the traced collective operands in tests/test_mesh_parity.py).
+    * ``sparse_topk`` / ``sparse_topk_hier`` — the gathered Selection: an
+      int32 global index + fp32 value per kept coordinate (8 bytes each),
+      ``nb·kb`` entries in the leaf's padded block layout — exactly the
+      two arrays ``stages.sparse_topk_leaf`` /
+      ``stages.sparse_topk_hier_leaf`` all_gather (regression-tested
+      against the traced collective operands in tests/test_mesh_parity.py).
+      On the hierarchical strategy this is the TIER-1 (client → group)
+      payload; the tier-2 group partial is :func:`leaf_tier2_bytes`.
     * ``packed_sign``  — the 8→1 packed sign bits + one fp32 scale.
     * ``dense``        — ``delta_dtype`` words for every element.
     """
     from repro.core.compressors import block_layout
     strategy = mesh_agg_strategy(fed)
-    if strategy == "sparse_topk":
+    if strategy in ("sparse_topk", "sparse_topk_hier"):
         bs, nb = block_layout(dl, block)
         kb = max(1, int(round(fed.compress_ratio * bs)))
         return nb * kb * 8                # int32 index + fp32 value
     if strategy == "packed_sign":
         return (dl + 7) // 8 + 4          # 1 bit/coord + fp32 scale
     return dl * jnp.dtype(fed.delta_dtype).itemsize
+
+
+def leaf_tier2_bytes(fed: FedConfig, dl: int) -> int:
+    """Per-GROUP root-collective payload bytes for one leaf of ``dl`` local
+    elements: the dense fp32 group partial ``sparse_topk_hier_leaf``
+    gathers over the group axis. Zero on every flat strategy — the root
+    tier only exists when the hierarchical collective actually runs."""
+    if mesh_agg_strategy(fed) == "sparse_topk_hier":
+        return dl * 4                     # fp32 partial, independent of n
+    return 0
 
 
 def mesh_wire_bytes(fed: FedConfig, delta_tree, block: int = 2048,
@@ -213,10 +226,29 @@ def mesh_wire_bytes(fed: FedConfig, delta_tree, block: int = 2048,
     client's ``tp`` model-parallel devices pushes its own payload into the
     client-axis collective (model-replicated leaves included — each device
     sends its copy), so the client's wire traffic is the local total × tp.
+
+    On the hierarchical strategy this is the TIER-1 (client → group)
+    contribution; :func:`mesh_wire_bytes_tiers` gives both tiers.
     """
     total = sum(leaf_wire_bytes(fed, int(np.prod(leaf.shape)), block)
                 for leaf in jax.tree.leaves(delta_tree))
     return total * max(tp, 1)
+
+
+def mesh_wire_bytes_tiers(fed: FedConfig, delta_tree, block: int = 2048,
+                          tp: int = 1) -> dict:
+    """Per-tier uplink bytes for one mesh round, resolved through the
+    executed :func:`~repro.core.stages.mesh_agg_strategy` like everything
+    else: ``tier1`` is the per-CLIENT selection payload
+    (:func:`mesh_wire_bytes` — every one of m clients pushes it), ``tier2``
+    the per-GROUP dense partial the root consumes (g pushes, independent
+    of the member count; 0 on flat strategies). The round's
+    ``wire_up_bytes`` metric is ``m·tier1 + g·tier2`` — billing the tiers
+    that actually run."""
+    tier2 = sum(leaf_tier2_bytes(fed, int(np.prod(leaf.shape)))
+                for leaf in jax.tree.leaves(delta_tree))
+    return {"tier1": mesh_wire_bytes(fed, delta_tree, block, tp),
+            "tier2": tier2 * max(tp, 1)}
 
 
 def build_fed_round(model, fed: FedConfig, train: TrainConfig,
@@ -230,11 +262,38 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
     # (DESIGN.md §3; contraction bound unchanged). Exact global top-k lives
     # in the FedSim simulation path.
     comp_name = "blocktopk" if fed.compressor == "topk" else fed.compressor
+    if fed.ef_store:
+        raise ValueError(
+            "FedConfig.ef_store is FedSim-only — the mesh backend already "
+            "shards per-client EF state over the client axes (one row per "
+            "client-axis device); there is no resident (m, d) buffer to "
+            "stream")
     strategy = mesh_agg_strategy(fed)
+    if fed.agg_groups > 1 and strategy != "sparse_topk_hier":
+        raise ValueError(
+            f"FedConfig.agg_groups={fed.agg_groups} but this config "
+            f"resolves the {strategy!r} aggregation strategy — the two-"
+            f"level collective only exists for the compacted-Selection "
+            f"path (fedcams + aggregation='sparse' + topk/blocktopk)")
+    if strategy == "sparse_topk_hier":
+        # the FIRST client axis is the group axis (sharding.rules); the
+        # launch site sizes it to agg_groups when building the mesh
+        if len(fed.client_axes) < 2:
+            raise ValueError(
+                f"agg_groups={fed.agg_groups} needs >= 2 client axes — "
+                f"the first enumerates the groups, the rest the members "
+                f"(e.g. client_axes=('cgroup', 'data')); got "
+                f"{fed.client_axes!r}")
+        if fed.num_clients % fed.agg_groups:
+            raise ValueError(
+                f"agg_groups={fed.agg_groups} must divide the client-axis "
+                f"size m={fed.num_clients} (the mesh reshapes the client "
+                f"axis into (groups, members))")
     # One-pass fused ingest (DESIGN.md §3): resolved at build time like the
-    # selection provider. Eligible only on the compacted-Selection strategy
-    # (the gathered (vals, idx) feed the ingest directly) without state
-    # sharding (the fused pass owns the whole replicated update).
+    # selection provider. Eligible only on the FLAT compacted-Selection
+    # strategy (the gathered (vals, idx) feed the ingest directly) without
+    # state sharding (the fused pass owns the whole replicated update).
+    from repro.core.server_opt import FUSED_INGEST_GROUPS_DETAIL
     fused = resolve_fused_ingest(
         fed,
         eligible=(strategy == "sparse_topk"
@@ -243,14 +302,14 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
         compiled=kernel_impl is not None and kernel_impl.compiled,
         detail="the mesh fuses only the sparse_topk aggregation strategy "
                "(fedcams + aggregation='sparse' + topk/blocktopk) without "
-               "shard_server_state")
+               "shard_server_state" + FUSED_INGEST_GROUPS_DETAIL)
     # One block layout for the whole sparse path: when the kernel provider
     # will select OR the kernel ingest will consume, the jnp compressor,
     # the kernels, and the wire metric all use the kernel's block — layout
     # mismatches would silently break the kernel/jnp bit-identity and the
     # metric==payload invariant.
     sparse_block = 2048
-    if strategy == "sparse_topk":
+    if strategy in ("sparse_topk", "sparse_topk_hier"):
         # resolve at build time, not inside the traced round: 'kernel'
         # without a KernelImpl has nothing to select with
         if (resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel"
@@ -364,12 +423,18 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
                                  round=new_st.t)
         # measured uplink bytes this round (trace-time constant, replicated);
         # same key/semantics as FedSim wire mode's per-round uplink metric.
-        # All m client-axis devices feed the collective — non-participants
-        # contribute masked zeros that still occupy wire — so the factor is
-        # m, not n_part.
-        wire = jnp.float32(
-            m_clients * mesh_wire_bytes(fed, delta, block=sparse_block,
-                                        tp=ctx.tp))
+        # All m client-axis devices feed the tier-1 collective — non-
+        # participants contribute masked zeros that still occupy wire — so
+        # that factor is m, not n_part; on the hierarchical strategy the
+        # root tier adds one dense partial per GROUP (g pushes, not m: the
+        # SPMD emulation replicates the partial across a group's members,
+        # but the logical two-tier topology the metric bills transmits it
+        # once per group — tests/test_mesh_parity.py checks both tiers
+        # against the traced collective operands).
+        tiers = mesh_wire_bytes_tiers(fed, delta, block=sparse_block,
+                                      tp=ctx.tp)
+        wire = jnp.float32(m_clients * tiers["tier1"]
+                           + fed.agg_groups * tiers["tier2"])
         return new_state, {"loss": loss, "wire_up_bytes": wire}
 
     return fed_round

@@ -16,8 +16,9 @@ from repro.core.local import (LocalUpdate, hetero_step_counts,  # noqa: F401
 from repro.core.mesh import (FedMeshState, _sharded_server_update,  # noqa: F401
                              build_fed_round, build_fed_rounds_scan,
                              client_batch_axes, fed_batch_defs,
-                             fed_state_defs, init_fed_state, leaf_wire_bytes,
-                             mesh_wire_bytes, scan_batch_specs,
+                             fed_state_defs, init_fed_state, leaf_tier2_bytes,
+                             leaf_wire_bytes, mesh_wire_bytes,
+                             mesh_wire_bytes_tiers, scan_batch_specs,
                              stage_mesh_rounds, state_shard_axes,
                              state_shard_dim)
 from repro.core.sim import FedSim, SimState, _CoreState  # noqa: F401
@@ -26,8 +27,9 @@ from repro.core.stages import (agg_dense, client_uplink,  # noqa: F401
                                mesh_agg_strategy, mesh_uplink,
                                packed_sign_leaf, resolve_mesh_sparse_impl,
                                select_tree, server_aggregate_sparse,
-                               server_downlink, sparse_topk_leaf,
-                               topk_select_tree)
+                               server_aggregate_sparse_grouped,
+                               server_downlink, sparse_topk_hier_leaf,
+                               sparse_topk_leaf, topk_select_tree)
 
 # pre-split private aliases, kept for callers that reached into the monolith
 _agg_dense = agg_dense

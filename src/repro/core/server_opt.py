@@ -49,6 +49,18 @@ class QuantState(NamedTuple):
 
 _is_quant = lambda x: isinstance(x, QuantState)
 
+#: Why hierarchical rounds (``FedConfig.agg_groups > 1``) cannot fuse the
+#: server ingest: tier 1 pre-merges each group's selections into a DENSE
+#: group partial, so the root consumes g dense partials — there is no
+#: compacted (vals, idx) stream left for ``server_ingest`` to scatter.
+#: Both backends append this to their ``resolve_fused_ingest`` detail so a
+#: forced ``fused_ingest='kernel'/'jnp'`` with groups fails with the same
+#: explanation everywhere.
+FUSED_INGEST_GROUPS_DETAIL = (
+    "; hierarchical aggregation (agg_groups > 1) is also ineligible — the "
+    "group tier pre-merges selections into dense partials, leaving no "
+    "compacted (vals, idx) stream for the one-pass ingest")
+
 
 def _dequant_flat(qs: QuantState) -> jax.Array:
     nb = qs.scale.shape[0]

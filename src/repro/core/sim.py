@@ -21,18 +21,23 @@ from repro.configs.base import FedConfig
 from repro.core.compressors import Compressor, make_compressor
 from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
                               run_local_steps)
-from repro.core.server_opt import (init_server_state, server_ingest,
+from repro.core.server_opt import (FUSED_INGEST_GROUPS_DETAIL,
+                                   init_server_state, server_ingest,
                                    server_update)
 from repro.core.stages import (client_uplink, client_uplink_sparse,
                                ef_update_sparse, gamma_diagnostic,
                                resolve_fused_ingest, server_aggregate_sparse,
+                               server_aggregate_sparse_grouped,
                                server_downlink)
 
 
 class SimState(NamedTuple):
     params: object            # pytree
     opt: object               # ServerState over flat vector
-    errors: jax.Array         # (m, d) per-client EF errors
+    errors: jax.Array         # (m, d) per-client EF errors — or, with
+    # fed.ef_store, the (n, d) participating-cohort rows gathered for the
+    # current round while the full store lives host-side (DESIGN.md
+    # §scale-out)
     server_error: jax.Array   # (d,) server-side EF error (two-way mode)
     x_client: jax.Array       # (d,) model as clients see it (two-way mode)
     # Host-side Python ints, exact at any scale: fp32 accumulation is only
@@ -108,6 +113,21 @@ class FedSim:
                 f"client_chunk={fed.client_chunk} must divide the "
                 f"per-round client count n={n_round} — a silent fallback "
                 f"to the full (n, d) vmap would defeat the memory bound")
+        if fed.agg_groups > 1:
+            # two-level aggregation (DESIGN.md §scale-out): groups merge
+            # compacted selections, so the flat dense paths can't run it
+            if not self.sparse:
+                raise ValueError(
+                    "FedConfig.agg_groups > 1 needs the select-once sparse "
+                    "(vals, idx) uplink — this config resolved the dense "
+                    "reference path (no compacted selection to group-merge)")
+            if fed.client_chunk and 0 < fed.client_chunk < n_round \
+                    and fed.client_chunk != n_round // fed.agg_groups:
+                raise ValueError(
+                    f"client_chunk={fed.client_chunk} and agg_groups="
+                    f"{fed.agg_groups} both set: the chunk must equal the "
+                    f"group size n//g={n_round // fed.agg_groups} so each "
+                    f"scan step is exactly one group's tier-1 merge")
         # one-pass fused server ingest (DESIGN.md §3): the (vals, idx)
         # selection goes straight into the m/v/v̂/x update — needs the
         # block-grouped selection layout (blocktopk), no dense-aggregate
@@ -116,14 +136,17 @@ class FedSim:
         chunked = bool(fed.client_chunk) and 0 < fed.client_chunk < n_round
         eligible = (self.sparse and self.comp is not None
                     and self.comp.name.startswith("blocktopk")
-                    and not fed.track_gamma and not chunked)
+                    and not fed.track_gamma and not chunked
+                    and fed.agg_groups <= 1)
         from repro.kernels.bitpack import _resolve_interpret
         self._fused = resolve_fused_ingest(
             fed, eligible=eligible, have_kernel=True,
             compiled=not _resolve_interpret(None),
             detail="FedSim fuses only the unchunked sparse blocktopk "
                    "uplink with track_gamma=False (the γ diagnostic and "
-                   "the client_chunk scan both consume a dense aggregate)")
+                   "the client_chunk scan both consume a dense aggregate)"
+                   + FUSED_INGEST_GROUPS_DETAIL)
+        self._efs = None  # EFStore, created in init() once d is known
         self._round_fn = None
         self._scan_fn = None
         self.codec = None
@@ -156,6 +179,15 @@ class FedSim:
         from repro.core.compressors import block_layout
         self._ingest_block = block_layout(d, self.fed.wire_block)[0]
         m = self.fed.num_clients
+        if self.fed.ef_store:
+            # EF shard store (DESIGN.md §scale-out): the device buffer
+            # holds only the participating cohort's rows; the full (m, d)
+            # store lives host-side in lazily materialized numpy shards
+            from repro.checkpoint.store import EFStore
+            self._efs = EFStore(m, d)
+            err_rows = self.fed.participating or m
+        else:
+            err_rows = m
         # copy the caller's params ONCE: the first round donates the state's
         # buffers, and consuming arrays the caller still owns would poison
         # any later use of their init pytree
@@ -164,7 +196,7 @@ class FedSim:
             params=params,
             opt=init_server_state(flat, self.fed.server_state_dtype,
                                   self._ingest_block),
-            errors=jnp.zeros((m, d), jnp.float32),
+            errors=jnp.zeros((err_rows, d), jnp.float32),
             server_error=jnp.zeros((d,), jnp.float32),
             x_client=flat,
             bits=0,
@@ -178,24 +210,54 @@ class FedSim:
         return n * 32 * self._d
 
     def _transport_met(self, idx_host, round_idx: int) -> dict:
-        """Simulated-network timing for one round (host-side numpy)."""
+        """Simulated-network timing for one round (host-side numpy). With
+        hierarchical aggregation the uplink is billed per tier: n client
+        messages (tier 1, the codec bytes) plus g dense fp32 group partials
+        pushed to the root (tier 2)."""
         up = self.codec.nbytes(self._d)
         down = self._down_codec.nbytes(self._d)
         timing = self.network.round(idx_host, up, down, round_idx)
-        return self.comm_log.record(timing)
+        g = self.fed.agg_groups
+        tier2 = g * 4 * self._d if g > 1 else 0
+        return self.comm_log.record(timing, tier2_bytes=tier2)
 
     # -- one round ---------------------------------------------------------
-    def round(self, state: SimState, client_batches, client_idx, rng):
+    def round(self, state: SimState, client_batches, client_idx, rng, *,
+              prefetch_idx=None):
         """client_batches: pytree with leading (n, K, ...); client_idx: (n,).
 
         The input state's device buffers are DONATED to the round
         executable (the (m, d) EF error buffer updates in place) — keep
-        only the returned state."""
+        only the returned state.
+
+        With ``fed.ef_store`` the round brackets the jitted body with the
+        host-side EF shard store (DESIGN.md §scale-out): gather the
+        cohort's rows to a dense (n, d) device block, run the round over
+        row *positions*, scatter the updated rows back. ``prefetch_idx``
+        (the NEXT round's client ids) starts the background gather for
+        round r+1 right after this round is dispatched, so the host
+        assembly overlaps the device compute."""
         if self._round_fn is None:
             self._round_fn = jax.jit(self._round_impl, donate_argnums=(0,))
-        new_core, met = self._round_fn(_CoreState(*state[:5]), client_batches,
-                                       client_idx, rng,
-                                       jnp.int32(state.round))
+        idx_host = np.asarray(client_idx)
+        if self._efs is not None:
+            rows = self._efs.gather(idx_host)
+            core = _CoreState(state.params, state.opt, jnp.asarray(rows),
+                              state.server_error, state.x_client)
+            # the round body indexes the (n, d) cohort block by position —
+            # per-client rng/batches key off position already, so the math
+            # per row is bit-identical to the resident (m, d) buffer
+            pos_idx = jnp.arange(idx_host.size, dtype=jnp.int32)
+            new_core, met = self._round_fn(core, client_batches, pos_idx,
+                                           rng, jnp.int32(state.round))
+            if prefetch_idx is not None:
+                self._efs.prefetch(np.asarray(prefetch_idx))
+            # np.asarray blocks on the round; the prefetch above overlaps it
+            self._efs.scatter(idx_host, np.asarray(new_core.errors))
+        else:
+            new_core, met = self._round_fn(_CoreState(*state[:5]),
+                                           client_batches, client_idx, rng,
+                                           jnp.int32(state.round))
         bits = state.bits + self._bits_per_round(client_idx.shape[0])
         met = dict(met)
         met["bits"] = bits
@@ -203,8 +265,7 @@ class FedSim:
             # transport runs between jitted rounds: byte counts are static
             # per codec, the timing draw is host-side numpy; the round
             # index is the host counter (no device sync)
-            met.update(self._transport_met(np.asarray(client_idx),
-                                           state.round))
+            met.update(self._transport_met(idx_host, state.round))
         return SimState(*new_core, bits=bits, round=state.round + 1), met
 
     # -- many rounds, one device program ------------------------------------
@@ -216,8 +277,23 @@ class FedSim:
         ``client_batches``: pytree with leading (R, n, K, ...);
         ``client_idx``: (R, n); ``rngs``: PRNG keys with leading R.
         Returns ``(new_state, mets)`` with the same per-round metric dicts
-        the :meth:`round` loop produces, bit-identical."""
+        the :meth:`round` loop produces, bit-identical.
+
+        With ``fed.ef_store`` the scan is replaced by a per-round loop:
+        each round's cohort rows move host↔device around the jitted body,
+        which a scan carry cannot express (the row set changes every
+        round). The loop prefetches round r+1's rows while round r
+        computes; metrics keep the exact :meth:`round` semantics."""
         R, n = int(client_idx.shape[0]), int(client_idx.shape[1])
+        if self._efs is not None:
+            st, mets = state, []
+            for r in range(R):
+                b_r = jax.tree.map(lambda x: x[r], client_batches)
+                nxt = client_idx[r + 1] if r + 1 < R else None
+                st, met = self.round(st, b_r, client_idx[r], rngs[r],
+                                     prefetch_idx=nxt)
+                mets.append(met)
+            return st, mets
         if self._scan_fn is None:
             def scan_rounds(core, batches, idx, keys, rounds):
                 def body(c, inp):
@@ -344,7 +420,17 @@ class FedSim:
                         self._sparse_uplink_block(
                             errors, i_c, start, flat0, b_c, p_c, rng,
                             eta_l, k_c)
-                    s_hat = s_hat.at[sidx.reshape(-1)].add(vals.reshape(-1))
+                    if fed.agg_groups > 1:
+                        # chunk == group (validated in __init__): merge
+                        # this group's selections into a FRESH dense
+                        # partial (tier 1) and hand the root the partial
+                        # (tier 2 accumulate) — the group-partial
+                        # association of the hierarchical mesh collective
+                        s_hat = s_hat + jnp.zeros(d, jnp.float32).at[
+                            sidx.reshape(-1)].add(vals.reshape(-1))
+                    else:
+                        s_hat = s_hat.at[sidx.reshape(-1)].add(
+                            vals.reshape(-1))
                     s_tot = s_tot + jnp.sum(tot_c, axis=0)
                 else:
                     e_c = (errors[i_c] if self.comp is not None
@@ -389,7 +475,11 @@ class FedSim:
                 new_core = _CoreState(self.unravel(new_flat), opt, errors,
                                       server_error, x_client)
                 return new_core, {"loss": loss, "gamma": jnp.zeros(())}
-            hats_mean = server_aggregate_sparse(vals, sidx, d, n)
+            hats_mean = (
+                server_aggregate_sparse_grouped(vals, sidx, d, n,
+                                                fed.agg_groups)
+                if fed.agg_groups > 1
+                else server_aggregate_sparse(vals, sidx, d, n))
             mean_tot = jnp.mean(tot_rows, axis=0)
             mean_delta = jnp.mean(delta, axis=0)
         else:

@@ -33,6 +33,9 @@ Mesh-side stages (per-device pytree shards + client-axis collectives):
   ``KernelImpl.topk_select_tree``).
 * :func:`sparse_topk_leaf`  — wire-size-true all_gather of one leaf's
   compacted ``(vals, idx)`` Selection + server scatter-add.
+* :func:`sparse_topk_hier_leaf` — the two-level form (``agg_groups > 1``):
+  member-axis Selection gather into a dense group partial, root consumes
+  the g partials (DESIGN.md §scale-out).
 * :func:`packed_sign_leaf`  — 1-bit/coordinate packed-sign all_gather.
 * :func:`mesh_uplink`       — the full uplink: aggregation-strategy
   selection + masked EF + delta-dtype narrowing.
@@ -145,6 +148,27 @@ def server_aggregate_sparse(vals, idx, d: int, n: int):
         vals.reshape(-1)) / n
 
 
+def server_aggregate_sparse_grouped(vals, idx, d: int, n: int, groups: int):
+    """Two-tier mean of n sparse client messages (DESIGN.md §scale-out):
+    the clients split into ``groups`` contiguous groups of n/g members;
+    each group segment-scatters its members' ``(vals, idx)`` entries into
+    a FRESH dense partial (tier 1 — the group-local merge), and the root
+    sums the g partials (tier 2). Exactly the entries
+    :func:`server_aggregate_sparse` consumes and the association the mesh's
+    :func:`sparse_topk_hier_leaf` executes: within a group the scatter
+    accumulates in member order, across groups the partial stack reduces —
+    so vs the flat scatter only coordinates selected by clients in ≥2
+    groups can reassociate, at ≤1 ulp each (the PR-4 collision analysis
+    one level up)."""
+    k = vals.shape[-1]
+    vg = vals.reshape(groups, -1, k)
+    ig = idx.reshape(groups, -1, k)
+    partials = jax.vmap(
+        lambda v, i: jnp.zeros(d, jnp.float32).at[i.reshape(-1)].add(
+            v.reshape(-1)))(vg, ig)
+    return jnp.sum(partials, axis=0) / n
+
+
 def server_downlink(fed: FedConfig, comp: Optional[Compressor], codec,
                     d: int, rng, new_flat, x_client, server_error):
     """Two-way (server→client) EF compression, paper appendix D.
@@ -195,16 +219,19 @@ def agg_dense(hat_tree, my_mask, n_eff, ctx: ParallelContext,
 def mesh_agg_strategy(fed: FedConfig) -> str:
     """Which client-axis collective the mesh round actually runs for this
     config: ``"sparse_topk"`` (compacted Selection all_gather),
-    ``"packed_sign"`` (1-bit packed gather), or ``"dense"`` (psum —
-    including every fallback: non-fedcams algorithms, and sparse
-    aggregation requested for a compressor with no compacted form).
-    ``mesh_uplink`` and ``mesh_wire_bytes`` both resolve through here, so
-    the wire accounting reports the path that executes, never the one the
-    config merely asked for."""
+    ``"sparse_topk_hier"`` (two-level: member-axis Selection gather into a
+    dense group partial, then the root consumes the g partials —
+    ``agg_groups > 1``, DESIGN.md §scale-out), ``"packed_sign"`` (1-bit
+    packed gather), or ``"dense"`` (psum — including every fallback:
+    non-fedcams algorithms, and sparse aggregation requested for a
+    compressor with no compacted form). ``mesh_uplink`` and
+    ``mesh_wire_bytes`` both resolve through here, so the wire accounting
+    reports the path (and the tiers) that execute, never what the config
+    merely asked for."""
     if fed.algorithm != "fedcams" or fed.aggregation != "sparse":
         return "dense"
     if fed.compressor in ("topk", "blocktopk"):
-        return "sparse_topk"
+        return "sparse_topk_hier" if fed.agg_groups > 1 else "sparse_topk"
     if fed.compressor == "packedsign":
         return "packed_sign"
     return "dense"
@@ -333,6 +360,29 @@ def sparse_topk_leaf(sel: Selection, leaf, n_eff, ctx: ParallelContext):
     return agg.reshape(leaf.shape)
 
 
+def sparse_topk_hier_leaf(sel: Selection, leaf, n_eff,
+                          ctx: ParallelContext):
+    """Two-level aggregation of one leaf (DESIGN.md §scale-out). Tier 1:
+    the member-axis all_gather carries each group's compacted ``(vals,
+    idx)`` Selections (the same O(k)/client payload as
+    :func:`sparse_topk_leaf`, but fanned into g independent gathers), and
+    every group merges its members' entries into a dense partial with the
+    same blocked scatter-add. Tier 2 — the root collective — gathers the g
+    group partials over the group axis and sums them: the root consumes g
+    messages of d words, independent of how many clients each group holds,
+    instead of n·k client entries. Association matches
+    :func:`server_aggregate_sparse_grouped` (within-group member-order
+    scatter, then the partial-stack reduce)."""
+    d = leaf.size
+    g_vals = ctx.all_gather_members(sel.vals[None], axis=0).reshape(-1)
+    g_idx = ctx.all_gather_members(sel.idx[None], axis=0).reshape(-1)
+    # fresh zeros (replicated vma), exactly like sparse_topk_leaf
+    partial = jnp.zeros(d, jnp.float32).at[g_idx].add(g_vals)
+    partials = ctx.all_gather_group_partials(partial[None], axis=0)  # (g, d)
+    agg = jnp.sum(partials, axis=0) / n_eff
+    return agg.reshape(leaf.shape)
+
+
 def packed_sign_leaf(tot, my_mask, n_eff, ctx: ParallelContext):
     """Beyond-paper: scaled-sign with the sign bits packed 8->1 in uint8 for
     the client-axis all_gather (1 bit/coordinate on the wire)."""
@@ -388,14 +438,18 @@ def mesh_uplink(fed: FedConfig, comp: Optional[Compressor],
             tot, hat, my_err)
         return agg, new_err
 
-    if strategy == "sparse_topk":
+    if strategy in ("sparse_topk", "sparse_topk_hier"):
         if resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel":
             sels, new_err = kernel_impl.topk_select_tree(
                 comp.ratio, delta, my_err, my_mask)
         else:
             sels, new_err = topk_select_tree(comp, delta, my_err, my_mask)
+        # selection and EF are identical across tiers — only the collective
+        # topology differs (flat gather vs member-gather + group partials)
+        leaf_fn = (sparse_topk_hier_leaf if strategy == "sparse_topk_hier"
+                   else sparse_topk_leaf)
         agg = jax.tree.map(
-            lambda s, lf: sparse_topk_leaf(s, lf, n_eff, ctx),
+            lambda s, lf: leaf_fn(s, lf, n_eff, ctx),
             sels, delta, is_leaf=_is_selection)
         return agg, new_err
 

@@ -33,6 +33,14 @@ def main(argv=None) -> None:
     ap.add_argument("--compressor", default="topk")
     ap.add_argument("--ratio", type=float, default=1.0 / 64.0)
     ap.add_argument("--aggregation", default="dense")
+    ap.add_argument("--agg-groups", type=int, default=1,
+                    help="two-level hierarchical sparse aggregation "
+                         "(DESIGN.md §scale-out): split the --dp clients "
+                         "into this many edge groups; each group merges its "
+                         "members' (vals, idx) selections into one dense "
+                         "partial and only the g partials reach the root. "
+                         "Requires a sparse --compressor and dp %% groups "
+                         "== 0; 1 = flat single-level aggregation")
     ap.add_argument("--mesh-sparse-impl", default="auto",
                     choices=("auto", "kernel", "jnp"),
                     help="sparse-aggregation selection provider (DESIGN.md "
@@ -103,10 +111,22 @@ def main(argv=None) -> None:
 
     spec = get_arch(args.arch)
     cfg = spec.smoke if args.smoke else spec.model
-    mesh = make_mesh((args.dp, args.tp), ("data", "model"))
     num_clients = args.dp
+    if args.agg_groups > 1:
+        # two-level aggregation: the client axis splits into (group, member)
+        # so tier 1 gathers run over "data" and tier 2 over "cgroup"
+        if args.dp % args.agg_groups:
+            ap.error(f"--dp {args.dp} not divisible by "
+                     f"--agg-groups {args.agg_groups}")
+        mesh = make_mesh((args.agg_groups, args.dp // args.agg_groups,
+                          args.tp), ("cgroup", "data", "model"))
+        client_axes = ("cgroup", "data")
+    else:
+        mesh = make_mesh((args.dp, args.tp), ("data", "model"))
+        client_axes = ("data",) if args.dp > 1 else ()
     fed = FedConfig(algorithm=args.algorithm, compressor=args.compressor,
                     compress_ratio=args.ratio, aggregation=args.aggregation,
+                    agg_groups=args.agg_groups,
                     mesh_sparse_impl=args.mesh_sparse_impl,
                     fused_ingest=args.fused_ingest,
                     server_state_dtype=args.server_state_dtype,
@@ -117,7 +137,7 @@ def main(argv=None) -> None:
                     local_steps_min=args.local_steps_min,
                     participating=args.participating, eta=args.eta,
                     eta_l=args.eta_l,
-                    client_axes=("data",) if args.dp > 1 else ())
+                    client_axes=client_axes)
     train = TrainConfig(global_batch=args.global_batch, seq_len=args.seq_len,
                         rounds=args.rounds, remat_policy="none")
     model = Model(cfg, tp=args.tp)

@@ -115,20 +115,52 @@ class ParallelContext:
         x = self.psum_clients(x)
         return x / self.num_clients if self.client_axes else x
 
-    def all_gather_clients(self, x, axis=0):
-        """Gather over the client axes with *invariant* (replicated) output
-        vma — every client ends up with the identical gathered tensor, which
-        the downstream server math relies on being replicated."""
+    @staticmethod
+    def _gather_axes(axes, x, axis):
+        """all_gather over ``axes`` with *invariant* (replicated-over-axis)
+        output vma where the primitive exists — downstream server math
+        relies on gathered tensors being replicated over the gathered
+        axes."""
         try:  # public alias pending upstream; primitive exists since 0.7
             from jax._src.lax.parallel import all_gather_invariant
         except ImportError:  # pragma: no cover
             all_gather_invariant = None
-        for ax in self.client_axes:
+        for ax in axes:
             if all_gather_invariant is not None:
                 x = all_gather_invariant(x, ax, axis=axis, tiled=True)
             else:
                 x = lax.all_gather(x, ax, axis=axis, tiled=True)
         return x
+
+    def all_gather_clients(self, x, axis=0):
+        """Gather over ALL client axes — every client ends up with the
+        identical gathered tensor (the flat, single-tier aggregation)."""
+        return self._gather_axes(self.client_axes, x, axis)
+
+    # -- two-level hierarchical aggregation (DESIGN.md §scale-out) -------
+    # Convention: the FIRST client axis is the group axis; the remaining
+    # client axes enumerate each group's members. The flat helpers above
+    # are oblivious — gathering/psumming over all axes is the same math.
+
+    def all_gather_members(self, x, axis=0):
+        """Tier 1: gather over the member axes only. Every member of a
+        group sees the group's stacked payload; groups stay distinct (the
+        result still varies over the group axis)."""
+        if len(self.client_axes) < 2:
+            raise ValueError(
+                "all_gather_members needs >= 2 client axes — the first is "
+                "the group axis (FedConfig.agg_groups hierarchical layout)")
+        return self._gather_axes(self.client_axes[1:], x, axis)
+
+    def all_gather_group_partials(self, x, axis=0):
+        """Tier 2 (the root collective): gather the per-group partials over
+        the group axis — g partials arrive, independent of the member
+        count."""
+        if len(self.client_axes) < 2:
+            raise ValueError(
+                "all_gather_group_partials needs >= 2 client axes — the "
+                "first is the group axis")
+        return self._gather_axes(self.client_axes[:1], x, axis)
 
     def client_index(self):
         """Linear index of this client across all client axes."""

@@ -82,6 +82,19 @@ CASES = {
                                    aggregation="sparse",
                                    fused_ingest="kernel",
                                    track_gamma=False),
+    # two-level hierarchical aggregation (DESIGN.md §scale-out): the 8
+    # clients split into 4 edge groups of 2 on a (cgroup=4, data=2) mesh;
+    # tier 1 merges each group's selections into a dense partial, tier 2
+    # gathers the 4 partials at the root. The sim side runs the same
+    # grouping through server_aggregate_sparse_grouped — both sides reduce
+    # the group partials with an identical jnp.sum over a stacked (g, d)
+    # array, so the pair stays bitwise comparable.
+    "blocktopk_hier": dict(algorithm="fedcams", compressor="blocktopk",
+                           aggregation="sparse", agg_groups=4),
+    "blocktopk_hier_kernel": dict(algorithm="fedcams",
+                                  compressor="blocktopk",
+                                  aggregation="sparse", agg_groups=4,
+                                  mesh_sparse_impl="kernel"),
 }
 
 
@@ -139,8 +152,14 @@ def _run_mesh(fed, rounds_targets, kernel_impl):
 
     model = ParityModel()
     train = TrainConfig(global_batch=M * BC, seq_len=1, remat_policy="none")
-    mesh = make_mesh((M,), ("data",))
-    ctx = ParallelContext(client_axes=("data",), num_clients=M)
+    if fed.agg_groups > 1:
+        # hierarchical layout: first client axis is the group axis; device
+        # linear order stays client-major, so target slicing is unchanged
+        mesh = make_mesh((fed.agg_groups, M // fed.agg_groups),
+                         ("cgroup", "data"))
+    else:
+        mesh = make_mesh((M,), ("data",))
+    ctx = ParallelContext(client_axes=fed.client_axes, num_clients=M)
     sdefs = fed_state_defs(model, fed)
     ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
     bsp = jax.tree.map(lambda d: d.spec, fed_batch_defs(model, fed, train),
@@ -207,9 +226,11 @@ def run_case(name: str, wire: bool) -> list:
 
     kw = dict(CASES[name])
     mesh_impl = kw.pop("mesh_sparse_impl", "auto")
+    groups = kw.get("agg_groups", 1)
     common = dict(compress_ratio=RATIO, local_steps=K, num_clients=M,
                   eta=ETA, eta_l=ETA_L)
-    fed_mesh = FedConfig(client_axes=("data",), mesh_sparse_impl=mesh_impl,
+    mesh_axes = ("cgroup", "data") if groups > 1 else ("data",)
+    fed_mesh = FedConfig(client_axes=mesh_axes, mesh_sparse_impl=mesh_impl,
                          **kw, **common)
     sim_kw = dict(kw)
     if sim_kw["compressor"] == "topk":     # mirror the mesh's documented remap
@@ -342,6 +363,118 @@ def jaxpr_payload(compressor: str) -> dict:
     }
 
 
+def jaxpr_payload_hier() -> dict:
+    """Trace the HIERARCHICAL sparse round (g = 2 groups of 4 on the forced
+    8-device mesh) at ratio 1/2 and split the client-axis all_gathers by
+    tier: "data"-axis gathers carry the member selections (tier 1),
+    "cgroup"-axis gathers carry the dense group partials the root consumes
+    (tier 2). At this ratio the root payload win is provable in-process:
+    the root sees g dense fp32 partials (g·d·4 bytes) instead of n
+    selections (n·k·8 = n·d/2·8 = 4·n·d bytes) — the O(g·d) vs O(n·k)
+    crossover the metric bills (``mesh_wire_bytes_tiers``)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.core.mesh import (build_fed_round, fed_batch_defs,
+                                 fed_state_defs, init_fed_state,
+                                 mesh_wire_bytes_tiers)
+    from repro.launch.mesh import make_mesh
+    from repro.models import params as pdefs
+    from repro.sharding.rules import ParallelContext
+
+    class TwoLeafModel(ParityModel):
+        def defs(self):
+            base = super().defs()
+            base["b"] = pdefs.ParamDef((300,), P(), dtype="float32")
+            return base
+
+        def loss(self, p, b, ctx, remat_policy="none", chunk=0):
+            diff = p["w"][None, :] - b["t"]
+            return (0.5 * jnp.sum(diff * diff)
+                    + 0.5 * jnp.sum(p["b"] * p["b"]), ())
+
+    g = 2
+    ratio = 0.5    # dense-partial tier wins only for k large: s > 1/ratio
+    fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                    aggregation="sparse", compress_ratio=ratio,
+                    agg_groups=g, local_steps=K, num_clients=M,
+                    eta=ETA, eta_l=ETA_L, client_axes=("cgroup", "data"))
+    model = TwoLeafModel()
+    train = TrainConfig(global_batch=M * BC, seq_len=1, remat_policy="none")
+    mesh = make_mesh((g, M // g), ("cgroup", "data"))
+    ctx = ParallelContext(client_axes=("cgroup", "data"), num_clients=M)
+    sdefs = fed_state_defs(model, fed)
+    ssp = jax.tree.map(lambda d: d.spec, sdefs, is_leaf=pdefs.is_def)
+    bsp = jax.tree.map(lambda d: d.spec, fed_batch_defs(model, fed, train),
+                       is_leaf=pdefs.is_def)
+    fn = compat.shard_map(build_fed_round(model, fed, train, ctx),
+                          mesh=mesh, in_specs=(ssp, bsp, P()),
+                          out_specs=(ssp, {"loss": P(),
+                                           "wire_up_bytes": P()}))
+    state = init_fed_state(model, fed, jax.random.PRNGKey(0))
+    jaxpr = jax.make_jaxpr(fn)(
+        state, {"t": jnp.zeros((K, M * BC, D), jnp.float32)}, jnp.int32(0))
+
+    tiers = {"tier1": [], "tier2": []}   # (operand bytes, shape) per gather
+
+    try:
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:  # pragma: no cover
+        ClosedJaxpr, Jaxpr = jax.core.ClosedJaxpr, jax.core.Jaxpr
+
+    def subjaxprs(params):
+        for v in params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for s in vs:
+                if isinstance(s, ClosedJaxpr):
+                    yield s.jaxpr
+                elif isinstance(s, Jaxpr):
+                    yield s
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("all_gather", "all_gather_invariant"):
+                ax = eqn.params.get("axis_name", ())
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                v = eqn.invars[0].aval
+                rec = [int(np.prod(v.shape)) * v.dtype.itemsize,
+                       list(v.shape)]
+                # one gather per axis (rules._gather_axes loops), so each
+                # eqn belongs to exactly one tier
+                tiers["tier2" if "cgroup" in axes else "tier1"].append(rec)
+            for s in subjaxprs(eqn.params):
+                walk(s)
+
+    walk(jaxpr.jaxpr)
+
+    delta_tree = {"w": np.zeros(D, np.float32),
+                  "b": np.zeros(300, np.float32)}
+    metric = mesh_wire_bytes_tiers(fed, delta_tree, tp=1)
+    # what the FLAT root would carry at the same ratio: every client's
+    # compacted selection (vals f32 + idx i32), summed over leaves
+    fed_flat = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                         aggregation="sparse", compress_ratio=ratio,
+                         local_steps=K, num_clients=M, eta=ETA, eta_l=ETA_L,
+                         client_axes=("data",))
+    flat_tiers = mesh_wire_bytes_tiers(fed_flat, delta_tree, tp=1)
+    return {
+        "tier1_gathers": tiers["tier1"],
+        "tier2_gathers": tiers["tier2"],
+        "tier1_operand_bytes": int(sum(t[0] for t in tiers["tier1"])),
+        "tier2_operand_bytes": int(sum(t[0] for t in tiers["tier2"])),
+        "metric_tier1_bytes": int(metric["tier1"]),
+        "metric_tier2_bytes": int(metric["tier2"]),
+        "agg_groups": g,
+        "num_clients": M,
+        "root_bytes_hier": g * int(metric["tier2"]),
+        "root_bytes_flat": M * int(flat_tiers["tier1"]),
+        "num_leaves": 2,
+    }
+
+
 def main() -> None:
     out = {"cases": {}, "jaxpr": {}}
     for name in CASES:
@@ -349,6 +482,7 @@ def main() -> None:
             out["cases"][f"{name}_wire{int(wire)}"] = run_case(name, wire)
     for compressor in ("blocktopk", "packedsign"):
         out["jaxpr"][compressor] = jaxpr_payload(compressor)
+    out["jaxpr_hier"] = jaxpr_payload_hier()
     print(json.dumps(out))
 
 

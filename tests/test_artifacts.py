@@ -1,9 +1,11 @@
-"""Integrity of the shipped dry-run artifact: the full 80-case matrix
-(10 archs x 4 shapes x 2 meshes) must be present with ok/justified-skip
-statuses and well-formed roofline terms."""
+"""Integrity of shipped/durable artifacts: the dry-run matrix (the full
+80-case 10 archs x 4 shapes x 2 meshes grid with ok/justified-skip statuses
+and well-formed roofline terms) and the checkpoint store's restore-time
+validation."""
 import json
 import os
 
+import numpy as np
 import pytest
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -51,3 +53,42 @@ def test_roofline_terms_well_formed(results):
         # train steps must show client/TP collectives
         if k.endswith("train_4k"):
             assert rl["collective_s"] > 0, k
+
+
+# -- checkpoint store restore-time validation --------------------------------
+
+
+def test_load_pytree_rejects_dtype_mismatch(tmp_path):
+    """Regression: restoring into a differently-dtyped target must raise,
+    never silently cast — int8 blockscale payloads read back as float
+    counts (or fp32 moments truncated to bf16) would corrupt optimizer
+    state without a single error."""
+    from repro.checkpoint.store import load_pytree, save_pytree
+    tree = {"v": np.arange(8, dtype=np.float32),
+            "q": np.arange(8, dtype=np.int8)}
+    save_pytree(str(tmp_path / "ck"), tree)
+    # same dtypes round-trip fine
+    got, _ = load_pytree(str(tmp_path / "ck"), tree)
+    np.testing.assert_array_equal(got["v"], tree["v"])
+    assert got["q"].dtype == np.int8
+    # restore target disagrees -> hard error naming the leaf
+    bad = {"v": np.arange(8, dtype=np.float32),
+           "q": np.arange(8, dtype=np.float32)}
+    with pytest.raises(ValueError, match="dtype mismatch for .*q"):
+        load_pytree(str(tmp_path / "ck"), bad)
+
+
+def test_load_pytree_rejects_manifest_file_disagreement(tmp_path):
+    """The manifest is the source of truth for what was saved; if the
+    .npz holds a different dtype the files are inconsistent (corrupt or
+    mixed save) and the restore must refuse."""
+    from repro.checkpoint.store import load_pytree, save_pytree
+    tree = {"v": np.arange(4, dtype=np.float32)}
+    save_pytree(str(tmp_path / "ck"), tree)
+    man = tmp_path / "ck" / "manifest.json"
+    m = json.loads(man.read_text())
+    m["dtypes"][0] = "int32"
+    man.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="manifest recorded"):
+        load_pytree(str(tmp_path / "ck"),
+                    {"v": np.arange(4, dtype=np.float32)})

@@ -7,7 +7,8 @@ that a permanent fixture instead of per-PR spot checks:
 * **Paired runs** (``tests/mesh_parity_harness.py`` under a forced
   8-device subprocess via ``conftest.run_forced_devices``): identical
   configs across (dense, topk, blocktopk, packedsign, kernel-routed
-  blocktopk, fused one-pass ingest jnp + kernel) × (wire on/off), three
+  blocktopk, fused one-pass ingest jnp + kernel, two-level hierarchical
+  blocktopk jnp + kernel) × (wire on/off), three
   rounds each. Per-client EF state is
   asserted BIT-identical — which is also the per-round selection-equality
   proof: the EF residual is ``tot`` with exactly the selected coordinates
@@ -70,7 +71,8 @@ def parity():
 
 CASE_NAMES = ["dense", "topk", "blocktopk", "packedsign",
               "blocktopk_kernel", "blocktopk_fused",
-              "blocktopk_fused_kernel"]
+              "blocktopk_fused_kernel", "blocktopk_hier",
+              "blocktopk_hier_kernel"]
 
 
 @pytest.mark.slow
@@ -92,7 +94,12 @@ def test_sim_mesh_parity(parity, name, wire):
             assert row["params_maxdiff_rel"] <= 2e-7, (name, wire, r, row)
         else:
             # compacted-Selection gather and packed-sign sum run in the
-            # sim's exact client order -> the whole state is bit-identical
+            # sim's exact client order -> the whole state is bit-identical.
+            # The hierarchical cases stay in this branch: both backends
+            # scatter each group's members in the same order and reduce the
+            # stacked (g, d) partials with the same jnp.sum, so the
+            # two-level reassociation is identical on both sides (measured
+            # bitwise, not just ≤1 ulp).
             assert row["params_bitwise"], (name, wire, r, row)
 
 
@@ -141,6 +148,31 @@ def test_packed_sign_payload_matches_metric(parity):
                                     + (300 + 7) // 8 + 4)
     assert jx["gathered_bytes"] == jx["metric_bytes"]
     assert jx["gathered_bytes"] < jx["dense_bytes"] / 16
+
+
+@pytest.mark.slow
+def test_hier_root_payload_beats_flat(parity):
+    """Traced hierarchical round (g=2 groups of 4, ratio 1/2): the member
+    ("data") axis carries two gathers per leaf (vals + idx), the group
+    ("cgroup") axis exactly one — the dense fp32 partial. The root
+    collective therefore carries g·d·4 bytes, independent of the client
+    count, vs the flat root's n·k·8 — at this ratio a >4× reduction,
+    proved on the traced collective operands, not the analytic metric
+    (which must agree with them, per tier)."""
+    jx = parity["jaxpr_hier"]
+    assert len(jx["tier1_gathers"]) == 2 * jx["num_leaves"]
+    assert len(jx["tier2_gathers"]) == jx["num_leaves"]
+    # metric == measured, per tier
+    assert jx["tier1_operand_bytes"] == jx["metric_tier1_bytes"]
+    assert jx["tier2_operand_bytes"] == jx["metric_tier2_bytes"]
+    # tier 2 is the dense fp32 partial: d words per leaf, no index stream
+    assert jx["metric_tier2_bytes"] == (2176 + 300) * 4
+    # the O(g·d) vs O(n·k) win at the root
+    assert jx["root_bytes_hier"] == (jx["agg_groups"]
+                                     * jx["metric_tier2_bytes"])
+    assert jx["root_bytes_flat"] == (jx["num_clients"]
+                                     * jx["metric_tier1_bytes"])
+    assert jx["root_bytes_hier"] < jx["root_bytes_flat"] / 4
 
 
 # -- mesh_wire_bytes: strategy resolution (the metric follows execution) -----
@@ -205,6 +237,80 @@ def test_mesh_sparse_impl_resolution():
         resolve_mesh_sparse_impl(forced, None)
     with pytest.raises(ValueError, match="mesh_sparse_impl"):
         FedConfig(mesh_sparse_impl="pallas")
+
+
+# -- two-level hierarchical aggregation (DESIGN.md §scale-out) ---------------
+
+
+def test_hier_strategy_and_tier_billing():
+    """agg_groups > 1 on the sparse pipeline resolves to the hierarchical
+    strategy; the tier split bills tier 1 identically to the flat per-client
+    payload and tier 2 as the dense fp32 partial per leaf (zero on every
+    flat strategy)."""
+    from repro.core.mesh import leaf_tier2_bytes, mesh_wire_bytes_tiers
+    tree = {"w": jnp.zeros(2176), "b": jnp.zeros(300)}
+    kw = dict(algorithm="fedcams", aggregation="sparse",
+              compressor="blocktopk", compress_ratio=1 / 8, num_clients=8)
+    flat = FedConfig(**kw)
+    hier = FedConfig(agg_groups=4, client_axes=("cgroup", "data"), **kw)
+    assert mesh_agg_strategy(hier) == "sparse_topk_hier"
+    t_hier = mesh_wire_bytes_tiers(hier, tree)
+    t_flat = mesh_wire_bytes_tiers(flat, tree)
+    assert t_hier["tier1"] == t_flat["tier1"] == mesh_wire_bytes(flat, tree)
+    assert t_flat["tier2"] == 0
+    assert t_hier["tier2"] == (2176 + 300) * 4
+    assert leaf_tier2_bytes(hier, 300) == 1200
+    assert leaf_tier2_bytes(flat, 300) == 0
+    # tp model shards each push their own partial into the collectives
+    assert mesh_wire_bytes_tiers(hier, tree, tp=2)["tier2"] == 2 * (2476 * 4)
+
+
+def test_agg_groups_config_validation():
+    """Hierarchical aggregation demands the (vals, idx) pipeline and groups
+    that divide the per-round cohort — ragged groups would silently skew
+    the tier-1 partials."""
+    kw = dict(algorithm="fedcams", aggregation="sparse", num_clients=8)
+    with pytest.raises(ValueError, match="agg_groups"):
+        FedConfig(agg_groups=0, **kw)
+    with pytest.raises(ValueError, match="vals, idx"):
+        FedConfig(agg_groups=2, compressor="sign", **kw)
+    with pytest.raises(ValueError, match="divide"):
+        FedConfig(agg_groups=3, compressor="blocktopk", **kw)
+    with pytest.raises(ValueError, match="divide"):
+        FedConfig(agg_groups=4, compressor="blocktopk", participating=6,
+                  num_clients=32, algorithm="fedcams", aggregation="sparse")
+    # participating (not num_clients) is the per-round cohort that must
+    # split evenly
+    ok = FedConfig(agg_groups=4, compressor="blocktopk", participating=8,
+                   num_clients=30, algorithm="fedcams", aggregation="sparse")
+    assert ok.agg_groups == 4
+
+
+def test_grouped_aggregate_matches_flat():
+    """server_aggregate_sparse_grouped == the flat scatter-mean whenever no
+    coordinate is selected by clients in two different groups, and within
+    1 ulp of the fp32 sum when collisions do occur (the PR-4 collision
+    analysis lifted one level: group partials reassociate the adds)."""
+    from repro.core.stages import (server_aggregate_sparse,
+                                   server_aggregate_sparse_grouped)
+    rng = np.random.default_rng(7)
+    d, n, k = 64, 8, 4
+    # disjoint indices across ALL clients -> no reassociation freedom
+    idx = jnp.asarray(rng.permutation(d)[:n * k].reshape(n, k), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    flat = server_aggregate_sparse(vals, idx, d, float(n))
+    for g in (1, 2, 4, 8):
+        got = server_aggregate_sparse_grouped(vals, idx, d, float(n), g)
+        assert np.array_equal(np.asarray(got), np.asarray(flat)), g
+    # colliding indices: same coordinate hit from different groups
+    idx2 = jnp.asarray(rng.integers(0, 8, size=(n, k)), jnp.int32)
+    flat2 = np.asarray(server_aggregate_sparse(vals, idx2, d, float(n)))
+    for g in (2, 4):
+        got2 = np.asarray(
+            server_aggregate_sparse_grouped(vals, idx2, d, float(n), g))
+        scale = np.abs(flat2).max()
+        assert np.abs(got2 - flat2).max() <= 2 * np.finfo(np.float32).eps \
+            * scale, g
 
 
 # -- single-device stage properties ------------------------------------------

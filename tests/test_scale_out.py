@@ -1,0 +1,283 @@
+"""Million-client scale-out machinery (DESIGN.md §scale-out).
+
+Three independently testable pieces make m = 10^6 clients feasible on one
+host without changing a single round's math:
+
+* ``EFStore`` (checkpoint/store.py): the per-client EF error buffer moves
+  host-side into lazily materialized numpy shards; the device only ever
+  holds the participating cohort's (n, d) rows. The store must be an
+  exact, race-free mirror of the resident (m, d) buffer under the
+  gather → update → scatter cycle FedSim drives, including the async
+  prefetch that overlaps round r+1's gather with round r's compute.
+* ``FedSim(fed.ef_store)``: the round brackets the jitted body with the
+  store. Per-client rng and batch rows key off cohort *position*, not
+  client id, so the streamed run must be BIT-identical to the resident
+  one — asserted here end-to-end, loss, params, and the full EF state.
+* Lazy ``SimulatedNetwork`` links: per-client bandwidth draws happen on
+  first participation, keyed by (seed, client_id) — deterministic,
+  participation-order independent, O(0) construction at any m.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import EFStore
+from repro.comm.transport import NetworkConfig, SimulatedNetwork
+from repro.configs.base import FedConfig
+from repro.core.rounds import FedSim
+from repro.core.sampling import sample_clients
+from repro.data.synthetic import FederatedClassification
+from repro.models import params as pdefs
+from repro.models.convmixer import MLPConfig, mlp_defs, mlp_loss
+
+MC = MLPConfig(in_dim=8, hidden=16, depth=2, num_classes=4)
+DATA = FederatedClassification(num_clients=32, num_classes=4, feature_dim=8,
+                               alpha=0.5, seed=0)
+
+
+# -- EFStore: host-side sharded EF state -------------------------------------
+
+
+def test_efstore_lazy_construction_at_any_scale():
+    """Constructing a store for 10^9 clients allocates nothing; rows never
+    scattered to read back as zeros (the EF init state)."""
+    s = EFStore(10**9, 64)
+    assert s.nbytes == 0
+    rows = s.gather(np.array([0, 123_456_789, 999_999_999]))
+    assert rows.shape == (3, 64) and rows.dtype == np.float32
+    assert not rows.any()
+    assert s.nbytes == 0                      # gather materializes nothing
+
+
+def test_efstore_shards_materialize_only_on_write():
+    s = EFStore(10_000, 32, shard_clients=100)
+    s.scatter(np.array([5, 7]), np.ones((2, 32), np.float32))
+    assert s.nbytes == 100 * 32 * 4           # one shard, not 10_000 rows
+    s.scatter(np.array([9_999]), np.ones((1, 32), np.float32))
+    assert s.nbytes == 2 * 100 * 32 * 4       # last shard is clamped...
+    # (shard 99 holds exactly rows 9900..9999 -> same 100-row size here)
+
+
+def test_efstore_final_shard_is_ragged():
+    s = EFStore(250, 8, shard_clients=100)    # shards of 100, 100, 50
+    s.scatter(np.array([249]), np.full((1, 8), 3.0, np.float32))
+    assert s.nbytes == 50 * 8 * 4
+    assert float(s.gather(np.array([249]))[0, 0]) == 3.0
+
+
+def test_efstore_mirrors_resident_buffer_under_round_cycle():
+    """Property: over chained gather → update → scatter rounds with random
+    (overlapping) cohorts and interleaved prefetches, the store stays an
+    exact mirror of a resident (m, d) numpy buffer — including the
+    prefetch-patching path, where round r writes rows that round r+1's
+    already-running background gather also covers."""
+    m, d, n = 500, 16, 32
+    rng = np.random.default_rng(0)
+    ref = np.zeros((m, d), np.float32)
+    s = EFStore(m, d, shard_clients=64)
+    prev_idx = None
+    for r in range(30):
+        # overlap consecutive cohorts half the time (the prefetch-patch
+        # case: a client participating in rounds r and r+1 must see its
+        # round-r write, not the stale prefetched snapshot)
+        if prev_idx is not None and r % 2:
+            keep = prev_idx[: n // 2]
+            rest = rng.choice(np.setdiff1d(np.arange(m), keep), n - keep.size,
+                              replace=False)
+            idx = np.concatenate([keep, rest])
+        else:
+            idx = rng.choice(m, n, replace=False)
+        rows = s.gather(idx)
+        np.testing.assert_array_equal(rows, ref[idx])
+        upd = rng.normal(size=(n, d)).astype(np.float32)
+        nxt = rng.choice(m, n, replace=False)
+        s.prefetch(nxt)                       # overlaps the "compute"
+        s.scatter(idx, upd)
+        ref[idx] = upd
+        prev_idx = nxt
+        if r % 3 == 0:
+            # the next gather may or may not match the queued prefetch
+            probe = rng.choice(m, 4, replace=False)
+            np.testing.assert_array_equal(s.gather(probe), ref[probe])
+    # full-state check: every row agrees, materialized or not
+    np.testing.assert_array_equal(s.gather(np.arange(m)), ref)
+
+
+def test_efstore_gather_consumes_only_matching_prefetch():
+    s = EFStore(100, 4)
+    s.scatter(np.array([1]), np.full((1, 4), 5.0, np.float32))
+    s.prefetch(np.array([1, 2]))
+    got = s.gather(np.array([3, 4]))          # mismatch: fresh locked gather
+    assert not got.any()
+    got = s.gather(np.array([1, 2]))          # match: consumes the buffer
+    assert float(got[0, 0]) == 5.0 and not got[1].any()
+
+
+def test_efstore_concurrent_prefetch_is_threadsafe():
+    """scatter() joining a prefetch thread that is mid-gather must not
+    deadlock or tear rows."""
+    s = EFStore(2_000, 8, shard_clients=64)
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        idx = rng.choice(2_000, 64, replace=False)
+        s.prefetch(idx)
+        s.scatter(idx[:32], np.ones((32, 8), np.float32))
+        got = s.gather(idx)
+        assert (got[:32] == 1.0).all()
+    assert threading.active_count() < 20      # threads are joined, not leaked
+
+
+# -- FedSim ef_store: streamed EF ≡ resident EF, bit for bit -----------------
+
+
+def _run_sim(ef_store, rounds=6, m=32, n=8, use_run_rounds=False):
+    fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                    compress_ratio=1 / 8, eta=0.05, eta_l=0.1,
+                    local_steps=2, num_clients=m, participating=n,
+                    ef_store=ef_store)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed)
+    params = pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0))
+    st = sim.init(params)
+    rng = jax.random.PRNGKey(1)
+    keys, idxs, batches = [], [], []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, m, n))
+        idxs.append(idx)
+        keys.append(k2)
+        batches.append(DATA.round_batches(idx, r, 2, 16))
+    losses = []
+    if use_run_rounds:
+        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+        st, mets = sim.run_rounds(st, jax.tree.map(jnp.asarray, stack),
+                                  jnp.asarray(np.stack(idxs)),
+                                  jnp.stack(keys))
+        losses = [float(met["loss"]) for met in mets]
+    else:
+        for r in range(rounds):
+            st, met = sim.round(st, jax.tree.map(jnp.asarray, batches[r]),
+                                jnp.asarray(idxs[r]), keys[r])
+            losses.append(float(met["loss"]))
+    # normalize the EF view: resident -> the full (m, d) buffer; store ->
+    # gather every client's row
+    if ef_store:
+        errors = sim._efs.gather(np.arange(m))
+    else:
+        errors = np.asarray(st.errors)
+    return losses, st, errors
+
+
+@pytest.mark.parametrize("use_run_rounds", [False, True],
+                         ids=["round_loop", "run_rounds"])
+def test_ef_store_bit_identical_to_resident(use_run_rounds):
+    """The streamed run (cohort rows around the jitted body, prefetch in
+    run_rounds mode) reproduces the resident run exactly: every round's
+    loss, the final params, and the complete per-client EF state."""
+    ref_losses, ref_st, ref_err = _run_sim(False)
+    losses, st, err = _run_sim(True, use_run_rounds=use_run_rounds)
+    assert losses == ref_losses
+    for a, b in zip(jax.tree.leaves(st.params),
+                    jax.tree.leaves(ref_st.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(err, ref_err)
+
+
+def test_ef_store_device_state_is_cohort_sized():
+    """The whole point: with ef_store the SimState carries (n, d), not
+    (m, d) — the m-row buffer never touches the device."""
+    fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                    compress_ratio=1 / 8, num_clients=1000, participating=4,
+                    ef_store=True)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed)
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+    assert st.errors.shape[0] == 4
+    assert sim._efs.nbytes == 0               # nothing materialized yet
+
+
+def test_ef_store_requires_fedsim():
+    from repro.core.mesh import build_fed_round
+    fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                    compress_ratio=1 / 8, ef_store=True, num_clients=4)
+    with pytest.raises(ValueError, match="ef_store"):
+        build_fed_round(object(), fed, None, None)
+
+
+# -- FedSim hierarchical aggregation + tiered wire accounting ----------------
+
+
+def test_sim_grouped_aggregation_matches_flat_loss_curve():
+    """agg_groups on the sim reassociates only the server aggregate; the
+    training signal must stay equivalent (same curve within float noise)
+    and the wire metrics must bill tier 2."""
+    def run(groups, wire=False):
+        fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                        compress_ratio=1 / 8, eta=0.05, eta_l=0.1,
+                        local_steps=2, num_clients=8, agg_groups=groups,
+                        wire=wire)
+        sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed)
+        st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+        rng = jax.random.PRNGKey(1)
+        mets = []
+        for r in range(5):
+            rng, k2 = jax.random.split(rng)
+            idx = np.arange(8)
+            b = DATA.round_batches(idx, r, 2, 16)
+            st, met = sim.round(st, jax.tree.map(jnp.asarray, b),
+                                jnp.asarray(idx), k2)
+            mets.append(met)
+        return mets
+
+    flat = run(1)
+    hier = run(4)
+    for a, b in zip(flat, hier):
+        assert float(b["loss"]) == pytest.approx(float(a["loss"]), rel=1e-5)
+    # tiered wire billing: tier 2 = g dense fp32 partials
+    met = run(4, wire=True)[-1]
+    d = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+        pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0))))
+    assert met["wire_tier2_bytes"] == 4 * 4 * d
+    assert met["wire_up_bytes"] == (met["wire_tier1_bytes"]
+                                    + met["wire_tier2_bytes"])
+    flat_met = run(1, wire=True)[-1]
+    assert flat_met["wire_tier2_bytes"] == 0
+    assert flat_met["wire_up_bytes"] == flat_met["wire_tier1_bytes"]
+
+
+# -- lazy SimulatedNetwork links ---------------------------------------------
+
+
+def test_lazy_network_constructs_instantly_at_any_m():
+    net = SimulatedNetwork(NetworkConfig(), 10**9)
+    assert net._links == {}
+    t = net.round([999_999_999, 5], 1000, 1000, round_idx=0)
+    assert t.round_time_s > 0 and len(net._links) == 2
+
+
+def test_lazy_network_draws_are_order_independent():
+    """A client's link quality is a pure function of (seed, client id):
+    two networks that meet the same clients in different rounds and orders
+    agree on every shared client's bandwidth draw."""
+    a = SimulatedNetwork(NetworkConfig(seed=3), 1000)
+    b = SimulatedNetwork(NetworkConfig(seed=3), 1000)
+    a.round([7, 3, 500], 100, 100, round_idx=0)
+    b.round([900], 100, 100, round_idx=5)
+    b.round([3], 100, 100, round_idx=6)
+    b.round([500, 7], 100, 100, round_idx=7)
+    for c in (3, 7, 500):
+        assert a._links[c] == b._links[c]
+    # different seed -> different links
+    c_net = SimulatedNetwork(NetworkConfig(seed=4), 1000)
+    c_net.round([3], 100, 100, round_idx=0)
+    assert c_net._links[3] != a._links[3]
+
+
+def test_lazy_network_timing_deterministic_per_round():
+    net1 = SimulatedNetwork(NetworkConfig(seed=0), 50)
+    net2 = SimulatedNetwork(NetworkConfig(seed=0), 50)
+    t1 = net1.round(np.arange(10), 5000, 2000, round_idx=3)
+    t2 = net2.round(np.arange(10), 5000, 2000, round_idx=3)
+    assert t1.round_time_s == t2.round_time_s
+    assert t1.slowest_client == t2.slowest_client
