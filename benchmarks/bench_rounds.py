@@ -178,7 +178,8 @@ def _run_legacy(sim, fn, st, data, cfg, idx_host, keys, rounds: int):
         bits += sim._bits_per_round(idx_host.shape[1])
         met = dict(met)
         met["bits"] = bits
-        met.update(sim._transport_met(idx_host[r], r))
+        met.update(sim._record_timing(sim._round_timing(idx_host[r], r),
+                                      None))
         met = {k: float(v) for k, v in met.items()}  # per-round sync
         st = type(st)(*core, bits=bits, round=r + 1)
     return st, met
@@ -620,6 +621,154 @@ def measure_scale_out(rounds: int) -> dict:
     }
 
 
+# Seventh dimension (``robustness``, DESIGN.md §robustness): final loss
+# and simulated time-to-loss under a (crash_prob × deadline × corruption)
+# sweep on a straggler-heavy network (20% stragglers at 8x slowdown —
+# wait-for-all pays the straggler max nearly every round, the deadline
+# cutoff caps the round at ~2·p50 and drops the stragglers into the EF
+# repayment path instead).
+ROBUST = dict(name="robustness",
+              mlp=dict(in_dim=16, hidden=32, depth=2, num_classes=8),
+              local_steps=2, batch=8)
+ROBUST_FED_KW = dict(algorithm="fedcams", num_clients=40, participating=16,
+                     compressor="blocktopk", compress_ratio=1 / 16,
+                     wire_block=256, eta=0.1, eta_l=0.05, wire=True,
+                     track_gamma=False)
+
+
+def _time_to_loss(losses, times, target: float) -> float:
+    """Cumulative simulated seconds until the loss first reaches
+    ``target`` (inf if it never does)."""
+    cum = 0.0
+    for l, t in zip(losses, times):
+        cum += t
+        if l <= target:
+            return cum
+    return float("inf")
+
+
+def _run_robust_arm(staged, fault, deadline_s: float) -> dict:
+    """One robustness arm: scan-driven FedSim run on the shared staged
+    inputs and a fresh (deterministic) straggler-heavy network."""
+    from repro.comm import NetworkConfig, SimulatedNetwork
+    from repro.comm.faults import FaultConfig  # noqa: F401 (callers build)
+    batches, idx, keys = staged
+    cfg = ROBUST
+    mc = MLPConfig(**cfg["mlp"])
+    fed = FedConfig(local_steps=cfg["local_steps"], fault=fault,
+                    deadline_s=deadline_s, **ROBUST_FED_KW)
+    net = SimulatedNetwork(
+        NetworkConfig(straggler_prob=0.2, straggler_slowdown=8.0, seed=0),
+        ROBUST_FED_KW["num_clients"])
+    sim = FedSim(lambda p, b: mlp_loss(p, b, mc), fed, network=net)
+    st = sim.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+    st, mets = sim.run_rounds(st, batches, idx, keys)
+    n = ROBUST_FED_KW["participating"]
+    losses = [float(m["loss"]) for m in mets]
+    times = [float(m["round_time_s"]) for m in mets]
+    return {
+        "losses": losses,
+        "final_loss": losses[-1],
+        "round_times_s": times,
+        "sim_time_s": float(np.sum(times)),
+        "mean_survivors": float(np.mean(
+            [float(m.get("survivors", n)) for m in mets])),
+        "rejected_total": float(np.sum(
+            [float(m.get("rejected", 0.0)) for m in mets])),
+    }
+
+
+def measure_robustness(rounds: int) -> dict:
+    """The robustness dimension: fault-free baseline, the all-ones-mask
+    bitwise-parity arm, the (crash_prob × deadline) grid, and the
+    corruption arms. Asserts the acceptance invariants inline — parity is
+    bitwise, NaN injection keeps the loss finite and within 2x of
+    fault-free, deadline-cutoff time-to-loss beats wait-for-all on the
+    straggler-heavy network."""
+    from repro.comm.faults import FaultConfig
+    cfg = ROBUST
+    m, n = ROBUST_FED_KW["num_clients"], ROBUST_FED_KW["participating"]
+    data = FederatedClassification(num_clients=m,
+                                   num_classes=cfg["mlp"]["num_classes"],
+                                   feature_dim=cfg["mlp"]["in_dim"], seed=0)
+    rng = jax.random.PRNGKey(1)
+    idxs, keys, batches = [], [], []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, m, n))
+        batches.append(data.round_batches(idx, r, cfg["local_steps"],
+                                          cfg["batch"]))
+        idxs.append(idx)
+        keys.append(k2)
+    staged = (jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches),
+              jnp.asarray(np.stack(idxs)), jnp.stack(keys))
+
+    base = _run_robust_arm(staged, None, 0.0)
+    parity = _run_robust_arm(staged, FaultConfig(), 0.0)
+    assert parity["losses"] == base["losses"], (
+        "all-ones fault mask must be bitwise-identical to fault-free",
+        base["losses"][:3], parity["losses"][:3])
+
+    # deadline from the round-0 timing quantiles: ~2·p50 passes every
+    # clean client (jitter included) and cuts the 8x stragglers. The
+    # probe network is a fresh instance with the same seed — draws are
+    # keyed by (seed, id)/(seed, round), so the arms see identical links.
+    from repro.comm import NetworkConfig, SimulatedNetwork
+    net = SimulatedNetwork(
+        NetworkConfig(straggler_prob=0.2, straggler_slowdown=8.0, seed=0), m)
+    mc = MLPConfig(**cfg["mlp"])
+    fed0 = FedConfig(local_steps=cfg["local_steps"], **ROBUST_FED_KW)
+    sim0 = FedSim(lambda p, b: mlp_loss(p, b, mc), fed0, network=net)
+    sim0.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+    timing0 = sim0._round_timing(np.asarray(staged[1][0]), 0)
+    dstar = 2.0 * timing0.p50_client_time_s
+
+    grid = {}
+    for crash in (0.0, 0.1, 0.3):
+        for dl, dname in ((0.0, "wait_all"), (dstar, "deadline")):
+            fault = FaultConfig(crash_prob=crash, seed=1)
+            grid[f"crash{crash}_{dname}"] = _run_robust_arm(staged, fault,
+                                                            dl)
+    corrupt = {}
+    for mode in ("nan", "bitflip"):
+        corrupt[mode] = _run_robust_arm(
+            staged, FaultConfig(corrupt_prob=0.1, corrupt_mode=mode,
+                                seed=2), 0.0)
+        assert np.isfinite(corrupt[mode]["final_loss"]), mode
+        assert corrupt[mode]["rejected_total"] > 0, (
+            f"{mode}@0.1 produced no rejections over {rounds} rounds")
+    assert corrupt["nan"]["final_loss"] <= 2.0 * base["final_loss"], (
+        "NaN injection at 0.1 must stay within 2x of fault-free",
+        corrupt["nan"]["final_loss"], base["final_loss"])
+
+    # acceptance: at straggler_prob >= 0.05 the deadline cutoff reaches
+    # the shared loss target in no more simulated time than wait-for-all
+    wait, cut = grid["crash0.0_wait_all"], grid["crash0.0_deadline"]
+    target = 1.02 * max(wait["final_loss"], cut["final_loss"])
+    ttl_wait = _time_to_loss(wait["losses"], wait["round_times_s"], target)
+    ttl_cut = _time_to_loss(cut["losses"], cut["round_times_s"], target)
+    assert ttl_cut <= ttl_wait, (
+        "deadline cutoff must not lose to wait-for-all on the "
+        "straggler-heavy network", ttl_cut, ttl_wait)
+    return {
+        "config": dict(ROBUST_FED_KW, rounds=rounds, deadline_s=dstar,
+                       network=dict(straggler_prob=0.2,
+                                    straggler_slowdown=8.0),
+                       **{k: v for k, v in cfg.items() if k != "name"}),
+        "baseline": base,
+        "parity_bitwise_identical": parity["losses"] == base["losses"],
+        "grid": grid,
+        "corruption": corrupt,
+        "time_to_loss": {"target": target, "wait_all_s": ttl_wait,
+                         "deadline_s": ttl_cut,
+                         "speedup": ttl_wait / ttl_cut},
+        "note": ("grid arms share staged batches/cohorts and the network "
+                 "seed, so loss deltas isolate the fault model; dropped "
+                 "clients keep stale EF residuals and repay on rejoin "
+                 "(DESIGN.md §robustness)."),
+    }
+
+
 _MESH_AB_CODE = '''
 import json, time
 import jax, jax.numpy as jnp, numpy as np
@@ -816,6 +965,17 @@ def main():
         f"rounds_per_s={ab['sparse_rounds_per_s']:.1f};"
         f"speedup_vs_dense={ab['speedup_sparse_vs_dense']:.2f}x;"
         f"wire_reduction={ab['wire_reduction']:.1f}x"))
+    rb = measure_robustness(20 if QUICK else 60)
+    payload["robustness"] = rb
+    rows.append(csv_row(
+        "rounds_robustness_deadline",
+        1e6 * rb["time_to_loss"]["deadline_s"],
+        f"ttl_speedup_vs_wait_all={rb['time_to_loss']['speedup']:.2f}x;"
+        f"parity_bitwise={rb['parity_bitwise_identical']};"
+        f"nan_final_loss={rb['corruption']['nan']['final_loss']:.3f};"
+        f"base_final_loss={rb['baseline']['final_loss']:.3f};"
+        f"crash0.3_deadline_loss="
+        f"{rb['grid']['crash0.3_deadline']['final_loss']:.3f}"))
     so = measure_scale_out(4 if QUICK else 6)
     payload["scale_out"] = so
     for m, r in so["sweep"].items():

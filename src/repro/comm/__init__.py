@@ -14,6 +14,8 @@ every client delta is encoded to packed bytes, timed through the network,
 and decoded server-side; ``FederatedTrainer.history`` then carries
 ``wire_bytes`` / ``round_time_s`` alongside the analytic ``bits``.
 """
+from repro.comm.faults import (FAULT_CORRUPT_MODES, FaultConfig,  # noqa: F401
+                               FaultInjector, FaultPlan)
 from repro.comm.metrics import CommLog  # noqa: F401
 from repro.comm.transport import (NetworkConfig, RoundTiming,  # noqa: F401
                                   SimulatedNetwork)

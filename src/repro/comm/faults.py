@@ -1,0 +1,352 @@
+"""Fault injection + deadline-robust rounds (DESIGN.md §robustness).
+
+A million-user deployment sees crashes, timeouts, and corrupt payloads
+every round; this module makes those events first-class and deterministic
+so robustness is a property the tests can pin down, not hope for.
+
+Three pieces:
+
+* :class:`FaultConfig` — the declarative fault model: per-round client
+  crash probability, scheduled crash windows (``crash_trace``), payload
+  corruption (NaN/Inf injection, bit flips, truncation) and the server's
+  round ``deadline_s``.
+* :class:`FaultInjector` — the host-side planner that sits between
+  ``SimulatedNetwork`` and the jitted round (core/sim.py): given the
+  cohort and the round's simulated client times it emits a
+  :class:`FaultPlan` of per-client arrays (survivor mask, corruption
+  flags, bit-flip masks, truncation cuts), all drawn deterministically
+  from ``(seed, round)`` with numpy — exactly like the transport's own
+  draws.
+* Pure jnp stages — :func:`corrupt_selection` / :func:`corrupt_dense`
+  apply the wire damage inside the trace, and :func:`validate_selection`
+  / :func:`validate_dense` are the server's validation-before-ingest
+  gate: NaN/Inf rejection, index-range checks and optional per-client
+  norm clipping, so one poisoned payload cannot corrupt the FedAMS
+  m/v/v̂ state. Rejected clients are excluded from the masked aggregate
+  (and NACKed: their EF residual stays stale, the same semantics
+  ``core/error_feedback.py`` documents for dropped clients).
+
+The mesh backend draws its fault mask in-trace from the shared round rng
+(:func:`mesh_fault_mask`) — every device must agree on who crashed
+without host round-trips — so the two backends share semantics, not
+streams.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+#: Known payload corruption modes (validated at FaultConfig construction).
+FAULT_CORRUPT_MODES = ("nan", "inf", "bitflip", "truncate")
+
+#: Sentinel index for truncated-away selection entries: far outside any
+#: leaf's padded block domain, so the range check rejects the client and
+#: the scatter would drop the entry even if it slipped through.
+INVALID_IDX = np.int32(2 ** 30)
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Declarative fault model for one run (frozen, jit-closure safe).
+
+    ``crash_prob`` — P(a sampled client crashes this round) — independent
+    per (round, cohort slot), deterministic in ``(seed, round)``.
+    ``crash_trace`` — scheduled outages: ``(client_id, from_round,
+    to_round)`` half-open windows during which that client is dead; an
+    open-ended entry (``to_round`` large) is a persistent crash.
+    ``corrupt_prob``/``corrupt_mode`` — P(a *delivered* payload was
+    damaged in transit) and how: ``nan``/``inf`` poison the values,
+    ``bitflip`` XORs random bits into the value words (and knocks an
+    index out of range, the checksum-less reality of a flipped header),
+    ``truncate`` cuts a suffix of the entries (a short read — the length
+    check rejects it).
+    ``deadline_s`` — server-side round deadline: clients whose simulated
+    finish time exceeds it are cut (FedSim wire mode only — the mesh has
+    no transport clock). 0 = wait for every survivor.
+    ``max_update_norm`` — optional per-client L2 clip applied by the
+    server to validated values before ingest. 0 = off.
+    """
+
+    crash_prob: float = 0.0
+    crash_trace: Tuple[Tuple[int, int, int], ...] = ()
+    corrupt_prob: float = 0.0
+    corrupt_mode: str = "nan"
+    deadline_s: float = 0.0
+    max_update_norm: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.crash_prob <= 1.0:
+            raise ValueError(
+                f"FaultConfig.crash_prob={self.crash_prob} must be in [0, 1]")
+        if not 0.0 <= self.corrupt_prob <= 1.0:
+            raise ValueError(
+                f"FaultConfig.corrupt_prob={self.corrupt_prob} must be in "
+                f"[0, 1]")
+        if self.corrupt_mode not in FAULT_CORRUPT_MODES:
+            raise ValueError(
+                f"FaultConfig.corrupt_mode={self.corrupt_mode!r} is not one "
+                f"of {FAULT_CORRUPT_MODES}")
+        if self.deadline_s < 0:
+            raise ValueError(
+                f"FaultConfig.deadline_s={self.deadline_s} must be >= 0")
+        if self.max_update_norm < 0:
+            raise ValueError(
+                f"FaultConfig.max_update_norm={self.max_update_norm} must "
+                f"be >= 0")
+        for entry in self.crash_trace:
+            if len(entry) != 3 or entry[1] > entry[2] or entry[0] < 0:
+                raise ValueError(
+                    f"FaultConfig.crash_trace entry {entry!r} must be "
+                    f"(client_id >= 0, from_round, to_round) with "
+                    f"from_round <= to_round")
+
+    @property
+    def any_faults(self) -> bool:
+        return bool(self.crash_prob or self.crash_trace or self.corrupt_prob
+                    or self.deadline_s or self.max_update_norm)
+
+
+class FaultPlan(NamedTuple):
+    """Per-client fault arrays for ONE round, fed into the jitted round.
+
+    ``survivors`` (n,) f32 — 1.0 for clients whose payload reached the
+    server (not crashed, not past the deadline); the in-trace validation
+    mask multiplies into this. ``corrupt`` (n,) f32 — 1.0 where the
+    delivered payload is damaged. ``xor_bits`` (n,) uint32 — the bit-flip
+    masks (0 for clean clients). ``trunc_keep`` (n,) f32 — kept fraction
+    of the selection entries under truncation (1.0 for clean clients)."""
+
+    survivors: np.ndarray
+    corrupt: np.ndarray
+    xor_bits: np.ndarray
+    trunc_keep: np.ndarray
+
+
+class FaultInjector:
+    """Deterministic host-side fault planner (FedSim).
+
+    Sits between :class:`~repro.comm.transport.SimulatedNetwork` and the
+    round: :meth:`plan` consumes the cohort ids, the round index and
+    (when wire mode runs) the round's :class:`RoundTiming`, and returns
+    the :class:`FaultPlan` plus a host-side info dict — survivor /
+    crashed / deadline-cut counts and the deadline-truncated
+    ``round_time_s`` (the cutoff turns the straggler max into a
+    quantile). All draws come from ``default_rng((cfg.seed, 0xFA017,
+    round))`` so a run is reproducible given the config alone."""
+
+    def __init__(self, cfg: FaultConfig, num_clients: int):
+        self.cfg = cfg
+        self.num_clients = num_clients
+        self._trace = tuple(cfg.crash_trace)
+
+    def _trace_dead(self, idx: np.ndarray, round_idx: int) -> np.ndarray:
+        dead = np.zeros(idx.size, bool)
+        for cid, r0, r1 in self._trace:
+            if r0 <= round_idx < r1:
+                dead |= idx == cid
+        return dead
+
+    def plan(self, client_idx, round_idx: int,
+             timing: Optional[object] = None):
+        """(cohort ids, round, optional RoundTiming) -> (FaultPlan, info).
+
+        ``info`` keys: ``survivors`` (delivered count before server
+        validation), ``crashed``, ``deadline_cut``, and ``round_time_s``
+        — the effective round wall-clock: with a deadline the server
+        stops waiting at ``deadline_s`` whenever anyone failed to
+        deliver; without one, crashed clients' connections reset (their
+        times drop out of the max)."""
+        cfg = self.cfg
+        idx = np.asarray(client_idx, np.int64)
+        n = idx.size
+        rng = np.random.default_rng((cfg.seed, 0xFA017, int(round_idx)))
+        crashed = rng.random(n) < cfg.crash_prob if cfg.crash_prob else \
+            np.zeros(n, bool)
+        crashed |= self._trace_dead(idx, int(round_idx))
+        # corruption draws are burned even for crashed clients so the
+        # stream per (seed, round) is independent of who crashed
+        corrupt = rng.random(n) < cfg.corrupt_prob if cfg.corrupt_prob else \
+            np.zeros(n, bool)
+        xor_bits = rng.integers(1, 2 ** 32, size=n, dtype=np.uint32)
+        trunc_keep = rng.random(n)
+        late = np.zeros(n, bool)
+        times = None if timing is None else np.asarray(timing.client_times_s)
+        if cfg.deadline_s > 0:
+            if times is None:
+                raise ValueError(
+                    "FaultConfig.deadline_s > 0 needs the round's "
+                    "RoundTiming (wire mode) — without simulated client "
+                    "times there is nothing to cut")
+            late = ~crashed & (times > cfg.deadline_s)
+        delivered = ~crashed & ~late
+        corrupt &= delivered
+        if times is not None and n:
+            delivered_times = times[delivered]
+            if cfg.deadline_s > 0 and not delivered.all():
+                round_time = float(cfg.deadline_s)
+            elif delivered_times.size:
+                round_time = float(delivered_times.max())
+            else:
+                round_time = 0.0
+        else:
+            round_time = None if timing is None else 0.0
+        plan = FaultPlan(
+            survivors=delivered.astype(np.float32),
+            corrupt=corrupt.astype(np.float32),
+            xor_bits=np.where(corrupt, xor_bits, np.uint32(0)),
+            trunc_keep=np.where(corrupt, trunc_keep, 1.0).astype(np.float32),
+        )
+        info = {
+            "survivors": float(delivered.sum()),
+            "crashed": float(crashed.sum()),
+            "deadline_cut": float(late.sum()),
+        }
+        if round_time is not None:
+            info["round_time_s"] = round_time
+        return plan, info
+
+
+# ---------------------------------------------------------------------------
+# In-trace stages: wire corruption + server validation-before-ingest
+# (pure jnp; imported lazily so host-only users never pay the jax import)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_selection(vals, idx, plan: FaultPlan, mode: str):
+    """Apply the configured wire damage to received ``(vals, idx)``
+    selections. ``vals``/``idx``: (..., k); the plan arrays broadcast over
+    the leading dims. Runs AFTER the client booked its EF residual — the
+    client believes its clean send succeeded; the damage is in transit."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    c = plan.corrupt[..., None] > 0
+    if mode == "nan":
+        return jnp.where(c, jnp.nan, vals), idx
+    if mode == "inf":
+        return jnp.where(c, jnp.inf, vals), idx
+    if mode == "bitflip":
+        bits = lax.bitcast_convert_type(vals.astype(jnp.float32), jnp.uint32)
+        flipped = lax.bitcast_convert_type(
+            bits ^ plan.xor_bits[..., None], jnp.float32)
+        vals = jnp.where(c, flipped, vals)
+        # a flipped length/offset word knocks an index out of the leaf's
+        # padded domain — give the server's range check a deterministic
+        # trigger on entry 0
+        k = idx.shape[-1]
+        hit = c & (jnp.arange(k) == 0)
+        idx = jnp.where(hit, idx ^ jnp.int32(2 ** 29), idx)
+        return vals, idx
+    if mode == "truncate":
+        k = vals.shape[-1]
+        cut = jnp.floor(plan.trunc_keep[..., None] * k)  # in [0, k-1]
+        dropped = c & (jnp.arange(k) >= cut)
+        return (jnp.where(dropped, 0.0, vals),
+                jnp.where(dropped, INVALID_IDX, idx))
+    raise ValueError(f"unknown corrupt_mode {mode!r}")
+
+
+def corrupt_dense(hats, plan: FaultPlan, mode: str):
+    """Dense-path sibling of :func:`corrupt_selection` for (..., d) client
+    rows. ``truncate`` zeroes the row's suffix; the server's length check
+    (:func:`validate_dense` with ``truncated``) rejects it."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    c = plan.corrupt[..., None] > 0
+    if mode == "nan":
+        return jnp.where(c, jnp.nan, hats)
+    if mode == "inf":
+        return jnp.where(c, jnp.inf, hats)
+    if mode == "bitflip":
+        bits = lax.bitcast_convert_type(hats.astype(jnp.float32), jnp.uint32)
+        flipped = lax.bitcast_convert_type(
+            bits ^ plan.xor_bits[..., None], jnp.float32)
+        return jnp.where(c, flipped, hats)
+    if mode == "truncate":
+        d = hats.shape[-1]
+        cut = jnp.floor(plan.trunc_keep[..., None] * d)
+        return jnp.where(c & (jnp.arange(d) >= cut), 0.0, hats)
+    raise ValueError(f"unknown corrupt_mode {mode!r}")
+
+
+def validate_selection(vals, idx, domain: int, max_norm: float = 0.0):
+    """Server-side validation before ingest for ``(..., k)`` selections.
+
+    Returns ``(vals', valid)``: ``valid`` (...,) f32 is 1.0 where every
+    value is finite and every index sits inside ``[0, domain)`` (the
+    leaf's zero-padded block domain — legitimate padded-tail entries pass,
+    a flipped or truncated index does not); ``vals'`` has invalid clients'
+    values replaced by 0 — NEVER multiply a NaN by a mask — and, when
+    ``max_norm > 0``, each client's values clipped to that L2 norm."""
+    import jax.numpy as jnp
+
+    finite = jnp.all(jnp.isfinite(vals), axis=-1)
+    inrange = jnp.all((idx >= 0) & (idx < domain), axis=-1)
+    valid = (finite & inrange).astype(jnp.float32)
+    vals = jnp.where(valid[..., None] > 0, vals, 0.0)
+    if max_norm > 0:
+        nrm = jnp.sqrt(jnp.sum(vals * vals, axis=-1, keepdims=True))
+        vals = vals * jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-30))
+    return vals, valid
+
+
+def validate_dense(hats, max_norm: float = 0.0, truncated=None):
+    """Dense-path validation: finite check per (..., d) client row, the
+    length check (``truncated`` — 1.0 where the payload arrived short),
+    and the optional per-client norm clip."""
+    import jax.numpy as jnp
+
+    valid = jnp.all(jnp.isfinite(hats), axis=-1)
+    if truncated is not None:
+        valid &= truncated == 0
+    valid = valid.astype(jnp.float32)
+    hats = jnp.where(valid[..., None] > 0, hats, 0.0)
+    if max_norm > 0:
+        nrm = jnp.sqrt(jnp.sum(hats * hats, axis=-1, keepdims=True))
+        hats = hats * jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-30))
+    return hats, valid
+
+
+def mesh_fault_mask(cfg: FaultConfig, rng, m: int, round_idx):
+    """(m,) f32 alive-mask for the mesh backend, drawn in-trace from the
+    shared per-round rng so every device agrees without host round-trips.
+    Crash draws use an independent fold of ``rng``; ``crash_trace``
+    windows are static tuples evaluated against the traced round index.
+    Semantics match the FedSim injector (different streams — the backends
+    share the fault *model*, not the draws)."""
+    import jax
+    import jax.numpy as jnp
+
+    alive = jnp.ones((m,), jnp.float32)
+    if cfg.crash_prob > 0:
+        u = jax.random.uniform(jax.random.fold_in(rng, 0xFA017), (m,))
+        alive = alive * (u >= cfg.crash_prob).astype(jnp.float32)
+    for cid, r0, r1 in cfg.crash_trace:
+        in_win = (round_idx >= r0) & (round_idx < r1)
+        alive = alive.at[cid].set(jnp.where(in_win, 0.0, alive[cid]))
+    return alive
+
+
+def mesh_corruption_plan(cfg: FaultConfig, rng, m: int) -> FaultPlan:
+    """Shared in-trace corruption draws for the mesh round: every device
+    computes the same (m,) flag/xor/cut arrays from the round rng; device
+    i damages its own payload with row i before the client-axis gather
+    (so the server — and client i itself, for the NACK — sees the
+    corrupted copy)."""
+    import jax
+    import jax.numpy as jnp
+
+    corrupt = (jax.random.uniform(jax.random.fold_in(rng, 0xFA018), (m,))
+               < cfg.corrupt_prob).astype(jnp.float32)
+    xor = jax.random.bits(jax.random.fold_in(rng, 0xFA019), (m,), jnp.uint32)
+    keep = jax.random.uniform(jax.random.fold_in(rng, 0xFA01A), (m,))
+    return FaultPlan(
+        survivors=jnp.ones((m,), jnp.float32),
+        corrupt=corrupt,
+        xor_bits=jnp.where(corrupt > 0, xor, jnp.uint32(0)),
+        trunc_keep=jnp.where(corrupt > 0, keep, 1.0).astype(jnp.float32),
+    )

@@ -44,7 +44,14 @@ class NetworkConfig:
 
 @dataclass
 class RoundTiming:
-    """Timing/byte report for one simulated round."""
+    """Timing/byte report for one simulated round.
+
+    ``round_time_s`` is the server's wall-clock for the round — the
+    straggler max, or the deadline-truncated value when a fault-tolerant
+    round cuts stragglers (comm.faults). ``p50_client_time_s`` /
+    ``p90_client_time_s`` are per-client completion-time quantiles over
+    the cohort (0.0 for an empty round) — the deadline sweep picks its
+    cutoffs from these."""
 
     round_time_s: float
     uplink_bytes: int
@@ -52,6 +59,8 @@ class RoundTiming:
     slowest_client: int
     mean_client_time_s: float
     client_times_s: np.ndarray
+    p50_client_time_s: float = 0.0
+    p90_client_time_s: float = 0.0
 
 
 class SimulatedNetwork:
@@ -68,24 +77,53 @@ class SimulatedNetwork:
         self.cfg = cfg
         self.num_clients = num_clients
         self._links: dict = {}  # client id -> (up_bps, down_bps)
+        # sorted snapshot of the cache for the vectorized warm path: the
+        # per-round lookup is a numpy searchsorted over these, not a
+        # Python loop over the cohort
+        self._ids = np.empty(0, np.int64)
+        self._ups = np.empty(0, np.float64)
+        self._downs = np.empty(0, np.float64)
+
+    def _draw_links(self, ids: np.ndarray) -> None:
+        """Draw + cache the fixed link pair for uncached ids. The draw
+        stays keyed by ``(cfg.seed, id)`` — one Generator per id, exactly
+        the stream the original per-client loop consumed (bit-identical,
+        regression-tested) — but only first-time participants ever reach
+        this loop; warm rounds are pure numpy."""
+        cfg = self.cfg
+        mu = -0.5 * cfg.bandwidth_sigma ** 2
+        raw = np.stack([
+            np.random.default_rng((cfg.seed, int(c))).normal(
+                mu, cfg.bandwidth_sigma, 2)
+            for c in ids])
+        lu, ld = np.exp(raw[:, 0]), np.exp(raw[:, 1])
+        ups = cfg.uplink_mbps * 1e6 / 8.0 * lu
+        downs = cfg.downlink_mbps * 1e6 / 8.0 * ld
+        for c, u, d in zip(ids, ups, downs):
+            self._links[int(c)] = (float(u), float(d))
+        all_ids = np.concatenate([self._ids, ids])
+        order = np.argsort(all_ids, kind="stable")
+        self._ids = all_ids[order]
+        self._ups = np.concatenate([self._ups, ups])[order]
+        self._downs = np.concatenate([self._downs, downs])[order]
 
     def _links_for(self, idx: np.ndarray):
         """Fixed per-client heterogeneity for the given clients: a client
-        on a bad link stays on it (cached, keyed by (seed, id))."""
-        cfg = self.cfg
-        up = np.empty(idx.size)
-        down = np.empty(idx.size)
-        mu = -0.5 * cfg.bandwidth_sigma ** 2
-        for j, c in enumerate(idx):
-            got = self._links.get(int(c))
-            if got is None:
-                rng = np.random.default_rng((cfg.seed, int(c)))
-                lu, ld = np.exp(rng.normal(mu, cfg.bandwidth_sigma, 2))
-                got = self._links[int(c)] = (
-                    cfg.uplink_mbps * 1e6 / 8.0 * lu,
-                    cfg.downlink_mbps * 1e6 / 8.0 * ld)
-            up[j], down[j] = got
-        return up, down
+        on a bad link stays on it (cached, keyed by (seed, id)). O(n log
+        cache) numpy once every cohort member has participated — no
+        Python loop over the cohort (the loop at 10^5-client cohorts
+        dominated the round)."""
+        idx = np.asarray(idx, np.int64)
+        if idx.size == 0:
+            return np.empty(0), np.empty(0)
+        pos = np.searchsorted(self._ids, idx)
+        safe = np.minimum(pos, max(self._ids.size - 1, 0))
+        hit = (self._ids[safe] == idx) if self._ids.size else \
+            np.zeros(idx.size, bool)
+        if not hit.all():
+            self._draw_links(np.unique(idx[~hit]))
+            pos = np.searchsorted(self._ids, idx)
+        return self._ups[pos], self._downs[pos]
 
     def round(self, client_idx: Sequence[int], uplink_bytes_per_client: int,
               downlink_bytes_per_client: int, round_idx: int) -> RoundTiming:
@@ -109,4 +147,8 @@ class SimulatedNetwork:
             slowest_client=int(idx[worst]) if n else -1,
             mean_client_time_s=float(per_client.mean()) if n else 0.0,
             client_times_s=per_client,
+            p50_client_time_s=float(np.percentile(per_client, 50)) if n
+            else 0.0,
+            p90_client_time_s=float(np.percentile(per_client, 90)) if n
+            else 0.0,
         )

@@ -9,7 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
+
+if TYPE_CHECKING:  # runtime import is lazy (see FedConfig.__post_init__):
+    # configs must stay importable before repro.comm/repro.core finish
+    # initializing (comm.wire pulls in core.api pulls in this module)
+    from repro.comm.faults import FaultConfig
 
 
 # ---------------------------------------------------------------------------
@@ -331,6 +336,22 @@ class FedConfig:
     # clients in several groups (the PR-4 collision analysis, now across
     # group partials — tests/test_mesh_parity.py).
     agg_groups: int = 1
+    # -- fault-tolerant rounds (DESIGN.md §robustness, comm/faults.py) -----
+    # Server round deadline in simulated seconds: clients whose simulated
+    # finish time exceeds it are cut from the round (their EF residual
+    # stays stale and repays on rejoin). Turns the straggler max in
+    # T_round into a quantile. FedSim wire mode only (needs the transport
+    # clock); 0 = wait for every survivor. Shorthand for a deadline-only
+    # FaultConfig — set either this or fault.deadline_s, not both.
+    deadline_s: float = 0.0
+    # Full fault model: crash probability / scheduled outages / payload
+    # corruption + validation-before-ingest knobs. None = fault-free
+    # (bit-identical to a build without the fault machinery). When set,
+    # both backends thread a survivor mask through the round: the
+    # aggregate is a masked scatter/mean over survivors and the server
+    # validates decoded payloads (NaN/Inf, index range, optional norm
+    # clip) before they can touch the FedAMS m/v/v̂ state.
+    fault: Optional["FaultConfig"] = None
     client_axes: Tuple[str, ...] = ("data",)   # mesh axes that enumerate clients
     use_kernels: bool = False      # use Pallas kernels for compress+server update
     # ZeRO-style sharding of the server optimizer state (m, v, v_hat) over
@@ -397,6 +418,46 @@ class FedConfig:
                     f"FedConfig.agg_groups={self.agg_groups} must divide "
                     f"the per-round client count n={n_round} — ragged "
                     f"groups would silently skew the tier-1 partials")
+        if self.deadline_s < 0:
+            raise ValueError(
+                f"FedConfig.deadline_s={self.deadline_s} must be >= 0")
+        if self.fault is not None or self.deadline_s > 0:
+            from repro.comm.faults import FaultConfig
+            if self.fault is not None and not isinstance(self.fault,
+                                                         FaultConfig):
+                raise ValueError(
+                    f"FedConfig.fault must be a comm.faults.FaultConfig, "
+                    f"got {type(self.fault).__name__}")
+            if self.deadline_s > 0 and self.fault is not None \
+                    and self.fault.deadline_s > 0:
+                raise ValueError(
+                    f"both FedConfig.deadline_s={self.deadline_s} and "
+                    f"FedConfig.fault.deadline_s="
+                    f"{self.fault.deadline_s} are set — pick one")
+            deadline = self.deadline_s or (
+                self.fault.deadline_s if self.fault is not None else 0.0)
+            if deadline > 0 and not self.wire:
+                raise ValueError(
+                    "a round deadline (deadline_s > 0) needs the simulated "
+                    "transport clock — set FedConfig(wire=True); the mesh "
+                    "backend has no per-client times to cut against")
+            if self.track_gamma:
+                raise ValueError(
+                    "FedConfig.fault/deadline_s requires track_gamma="
+                    "False — the γ diagnostic consumes the dense mean "
+                    "over the FULL cohort, which a partial round no "
+                    "longer computes")
+            if self.agg_groups > 1:
+                raise ValueError(
+                    "FedConfig.fault/deadline_s is incompatible with "
+                    "agg_groups > 1 — the two-level group partials have "
+                    "no per-client survivor masking yet")
+            if self.client_chunk:
+                raise ValueError(
+                    "FedConfig.fault/deadline_s is incompatible with "
+                    "client_chunk — the chunked scan accumulates dense "
+                    "running sums the survivor mask cannot thread "
+                    "through; run the unchunked round")
 
 
 @dataclass(frozen=True)

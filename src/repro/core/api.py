@@ -22,7 +22,8 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core.mesh import (build_fed_round, fed_batch_defs,
-                             fed_state_defs, init_fed_state)
+                             fed_state_defs, init_fed_state,
+                             mesh_metric_specs)
 from repro.core.sim import FedSim
 from repro.core.sampling import sample_clients
 from repro.models import params as pdefs
@@ -79,7 +80,7 @@ class FederatedTrainer:
             # per-client EF errors) updates in place round over round
             self._step = jax.jit(compat.shard_map(
                 rnd, mesh=self.mesh, in_specs=(ssp, bsp, P()),
-                out_specs=(ssp, {"loss": P(), "wire_up_bytes": P()})),
+                out_specs=(ssp, mesh_metric_specs(self.fed))),
                 donate_argnums=(0,))
             self._rnd, self._ssp, self._bsp = rnd, ssp, bsp
             self._scan_step = None
@@ -99,8 +100,8 @@ class FederatedTrainer:
             self._scan_step = jax.jit(compat.shard_map(
                 build_fed_rounds_scan(self._rnd), mesh=self.mesh,
                 in_specs=(self._ssp, scan_batch_specs(self._bsp), P(None)),
-                out_specs=(self._ssp, {"loss": P(None),
-                                       "wire_up_bytes": P(None)})),
+                out_specs=(self._ssp, mesh_metric_specs(self.fed,
+                                                        scan=True))),
                 donate_argnums=(0,))
         return self._scan_step
 

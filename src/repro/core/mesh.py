@@ -20,8 +20,10 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.comm.faults import (FaultPlan, corrupt_selection,
+                               mesh_corruption_plan, mesh_fault_mask)
 from repro.configs.base import FedConfig, TrainConfig
-from repro.core.compressors import make_compressor
+from repro.core.compressors import Selection, block_layout, make_compressor
 from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
                               run_local_steps)
 from repro.core.sampling import participation_mask
@@ -29,7 +31,8 @@ from repro.core.server_opt import (ServerState, server_ingest_tree,
                                    server_update)
 from repro.core.stages import (mesh_agg_strategy, mesh_uplink,
                                resolve_fused_ingest,
-                               resolve_mesh_sparse_impl, topk_select_tree)
+                               resolve_mesh_sparse_impl,
+                               sparse_topk_leaf_validated, topk_select_tree)
 from repro.models import params as pdefs
 from repro.sharding.rules import ParallelContext
 
@@ -269,6 +272,26 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
             "client-axis device); there is no resident (m, d) buffer to "
             "stream")
     strategy = mesh_agg_strategy(fed)
+    # fault tolerance (DESIGN.md §robustness): the mesh draws its crash
+    # mask in-trace from the shared round rng — every device must agree on
+    # who died without host round-trips — and damages/validates payloads
+    # around the gathered Selection collective
+    fcfg = fed.fault
+    if fed.deadline_s > 0 or (fcfg is not None and fcfg.deadline_s > 0):
+        raise ValueError(
+            "deadline_s is FedSim wire-mode only — the mesh backend has "
+            "no transport clock to cut against; model stragglers as "
+            "crashes (FaultConfig.crash_prob / crash_trace) on the mesh")
+    validating = fcfg is not None and (fcfg.corrupt_prob > 0
+                                       or fcfg.max_update_norm > 0)
+    if validating and strategy != "sparse_topk":
+        raise ValueError(
+            f"FaultConfig corruption/validation on the mesh needs the "
+            f"flat compacted-Selection collective (strategy "
+            f"'sparse_topk'), but this config resolves {strategy!r} — "
+            f"the validation-before-ingest gate inspects gathered "
+            f"(vals, idx) payloads, which the dense psum / hierarchical "
+            f"partials never materialize per client")
     if fed.agg_groups > 1 and strategy != "sparse_topk_hier":
         raise ValueError(
             f"FedConfig.agg_groups={fed.agg_groups} but this config "
@@ -297,12 +320,15 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
     fused = resolve_fused_ingest(
         fed,
         eligible=(strategy == "sparse_topk"
-                  and not (fed.shard_server_state and fed.state_shards > 1)),
+                  and not (fed.shard_server_state and fed.state_shards > 1)
+                  and fcfg is None),
         have_kernel=kernel_impl is not None,
         compiled=kernel_impl is not None and kernel_impl.compiled,
         detail="the mesh fuses only the sparse_topk aggregation strategy "
                "(fedcams + aggregation='sparse' + topk/blocktopk) without "
-               "shard_server_state" + FUSED_INGEST_GROUPS_DETAIL)
+               "shard_server_state or fault injection (the masked "
+               "survivor aggregate needs the unfused gather path)"
+               + FUSED_INGEST_GROUPS_DETAIL)
     # One block layout for the whole sparse path: when the kernel provider
     # will select OR the kernel ingest will consume, the jnp compressor,
     # the kernels, and the wire metric all use the kernel's block — layout
@@ -372,11 +398,32 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
 
         # participation (same mask on every device via the shared rng)
         mask = participation_mask(jax.random.fold_in(rng, 1), m_clients, n_part)
+        if fcfg is not None:
+            # crashed clients drop out of the round exactly like non-
+            # participants: zero contribution, stale EF row (the drop
+            # semantics core/error_feedback.py documents). n_eff becomes
+            # the traced survivor count — with no faults drawn it equals
+            # n_part bit-exactly, so the disabled path stays bit-identical.
+            mask = mask * mesh_fault_mask(fcfg, rng, m_clients, state.round)
+            n_eff = jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            n_eff = float(n_part)
         my_mask = mask[ctx.client_index()]
-        n_eff = float(n_part)
 
         my_err = jax.tree.map(lambda e: e[0], state.errors)  # local client slice
         st = ServerState(m=state.m, v=state.v, vhat=state.vhat, t=state.round)
+
+        def _server_step(agg):
+            # server update (replicated elementwise math on sharded leaves)
+            if kernel_impl is not None and fed.algorithm in (
+                    "fedams", "fedcams", "fedamsgrad"):
+                return kernel_impl.fedams_update_tree(fed, st, params, agg)
+            if fed.shard_server_state and fed.state_shards > 1:
+                return _sharded_server_update(fed, st, params, agg, model,
+                                              ctx)
+            return server_update(fed, st, params, agg)
+
+        rejected = jnp.zeros(())
         if fused != "off":
             # one-pass fused ingest: select once (same provider resolution
             # as mesh_uplink's sparse branch), all_gather the compacted
@@ -398,20 +445,54 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
                 new_params, new_st = server_ingest_tree(
                     fed, st, params, sels, n_eff, gather,
                     block=sparse_block, impl="jnp")
+        elif validating:
+            # fault-tolerant sparse round: select once (same provider as
+            # mesh_uplink's sparse branch), damage this device's OWN
+            # payload in transit (every device computes the same shared
+            # corruption plan, so the gathered copies — including the
+            # sender's — all show the damage), validate server-side, and
+            # aggregate over alive ∧ valid. A rejected client is NACKed:
+            # its EF row rolls back to the stale pre-round value, the
+            # same drop semantics core/error_feedback.py documents.
+            if resolve_mesh_sparse_impl(fed, kernel_impl) == "kernel":
+                sels, new_err = kernel_impl.topk_select_tree(
+                    comp.ratio, delta, my_err, my_mask)
+            else:
+                sels, new_err = topk_select_tree(comp, delta, my_err,
+                                                 my_mask)
+            plan = mesh_corruption_plan(fcfg, rng, m_clients)
+            ci = ctx.client_index()
+            myplan = jax.tree.map(lambda a: a[ci][None], plan)
+
+            def leaf_fault(s, lf):
+                cv, cidx = corrupt_selection(s.vals[None], s.idx[None],
+                                             myplan, fcfg.corrupt_mode)
+                bs, nb = block_layout(lf.size, sparse_block)
+                return sparse_topk_leaf_validated(
+                    Selection(vals=cv[0], idx=cidx[0]), lf, mask, ctx,
+                    bs * nb, fcfg.max_update_norm)
+
+            is_sel = lambda x: isinstance(x, Selection)
+            outs = jax.tree.map(leaf_fault, sels, delta, is_leaf=is_sel)
+            is_t = lambda x: isinstance(x, tuple)
+            agg = jax.tree.map(lambda t: t[0], outs, is_leaf=is_t)
+            valid_leaves = [t[1] for t in
+                            jax.tree.leaves(outs, is_leaf=is_t)]
+            rejected = jax.tree.leaves(outs, is_leaf=is_t)[0][2]
+            # a client survives only if EVERY leaf validated — one damaged
+            # leaf NACKs the whole client update (EF rolls back, so the
+            # full residual repays on the next clean round)
+            my_valid = valid_leaves[0]
+            for v in valid_leaves[1:]:
+                my_valid = my_valid * v
+            new_err = jax.tree.map(
+                lambda ne, eo: jnp.where(my_valid > 0, ne, eo),
+                new_err, my_err)
+            new_params, new_st = _server_step(agg)
         else:
             agg, new_err = mesh_uplink(fed, comp, ctx, kernel_impl, rng,
                                        delta, my_err, my_mask, n_eff)
-
-            # server update (replicated elementwise math on sharded leaves)
-            if kernel_impl is not None and fed.algorithm in (
-                    "fedams", "fedcams", "fedamsgrad"):
-                new_params, new_st = kernel_impl.fedams_update_tree(
-                    fed, st, params, agg)
-            elif fed.shard_server_state and fed.state_shards > 1:
-                new_params, new_st = _sharded_server_update(
-                    fed, st, params, agg, model, ctx)
-            else:
-                new_params, new_st = server_update(fed, st, params, agg)
+            new_params, new_st = _server_step(agg)
 
         errors = jax.tree.map(lambda e, ne: e.at[0].set(ne),
                               state.errors, new_err)
@@ -435,9 +516,29 @@ def build_fed_round(model, fed: FedConfig, train: TrainConfig,
                                       tp=ctx.tp)
         wire = jnp.float32(m_clients * tiers["tier1"]
                            + fed.agg_groups * tiers["tier2"])
-        return new_state, {"loss": loss, "wire_up_bytes": wire}
+        met = {"loss": loss, "wire_up_bytes": wire}
+        if fcfg is not None:
+            # replicated scalars (mask/validation are shared draws):
+            # delivered survivor count and validation-rejected count —
+            # the mesh siblings of FedSim's fault metrics
+            met["survivors"] = jnp.sum(mask)
+            met["rejected"] = rejected
+        return new_state, met
 
     return fed_round
+
+
+def mesh_metric_specs(fed: FedConfig, *, scan: bool = False):
+    """PartitionSpecs for the metrics dict ``build_fed_round`` emits —
+    launch sites and core.api build their shard_map ``out_specs`` through
+    here so the fault-metric keys cannot drift out of sync with the round
+    body. ``scan=True`` gives the stacked (R,)-leading variant."""
+    sp = P(None) if scan else P()
+    specs = {"loss": sp, "wire_up_bytes": sp}
+    if fed.fault is not None:
+        specs["survivors"] = sp
+        specs["rejected"] = sp
+    return specs
 
 
 def build_fed_rounds_scan(fed_round):

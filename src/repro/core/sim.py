@@ -9,6 +9,7 @@ EF/compress/wire stages from core/stages.py.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -17,6 +18,9 @@ import numpy as np
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
+from repro.comm.faults import (FaultConfig, FaultInjector, FaultPlan,
+                               corrupt_dense, corrupt_selection,
+                               validate_dense, validate_selection)
 from repro.configs.base import FedConfig
 from repro.core.compressors import Compressor, make_compressor
 from repro.core.local import (hetero_step_counts, local_lr, make_local_update,
@@ -28,6 +32,7 @@ from repro.core.stages import (client_uplink, client_uplink_sparse,
                                ef_update_sparse, gamma_diagnostic,
                                resolve_fused_ingest, server_aggregate_sparse,
                                server_aggregate_sparse_grouped,
+                               server_aggregate_sparse_masked,
                                server_downlink)
 
 
@@ -134,17 +139,28 @@ class FedSim:
         # consumer (γ diagnostic), and the unchunked sparse path (the
         # chunked round accumulates a dense running scatter instead)
         chunked = bool(fed.client_chunk) and 0 < fed.client_chunk < n_round
+        # fault tolerance (DESIGN.md §robustness): resolve the effective
+        # FaultConfig — a bare fed.deadline_s means "deadline cutoff, no
+        # injected faults" — and build the host-side deterministic injector
+        fcfg = fed.fault
+        if fed.deadline_s > 0:
+            fcfg = (FaultConfig(deadline_s=fed.deadline_s) if fcfg is None
+                    else dataclasses.replace(fcfg, deadline_s=fed.deadline_s))
+        self.faults = (FaultInjector(fcfg, fed.num_clients)
+                       if fcfg is not None else None)
         eligible = (self.sparse and self.comp is not None
                     and self.comp.name.startswith("blocktopk")
                     and not fed.track_gamma and not chunked
-                    and fed.agg_groups <= 1)
+                    and fed.agg_groups <= 1 and self.faults is None)
         from repro.kernels.bitpack import _resolve_interpret
         self._fused = resolve_fused_ingest(
             fed, eligible=eligible, have_kernel=True,
             compiled=not _resolve_interpret(None),
             detail="FedSim fuses only the unchunked sparse blocktopk "
                    "uplink with track_gamma=False (the γ diagnostic and "
-                   "the client_chunk scan both consume a dense aggregate)"
+                   "the client_chunk scan both consume a dense aggregate) "
+                   "and no fault injection (the masked survivor aggregate "
+                   "needs the unfused scatter path)"
                    + FUSED_INGEST_GROUPS_DETAIL)
         self._efs = None  # EFStore, created in init() once d is known
         self._round_fn = None
@@ -177,7 +193,12 @@ class FedSim:
         # layout): block_layout clamps wire_block exactly like the
         # compressor will at select time
         from repro.core.compressors import block_layout
-        self._ingest_block = block_layout(d, self.fed.wire_block)[0]
+        bs, nb = block_layout(d, self.fed.wire_block)
+        self._ingest_block = bs
+        # valid index domain for server-side validation: selections carry
+        # padded-tail indices in [d, nb*bs) that the scatter drops, so the
+        # range check must accept the padded domain, not just [0, d)
+        self._sel_domain = bs * nb
         m = self.fed.num_clients
         if self.fed.ef_store:
             # EF shard store (DESIGN.md §scale-out): the device buffer
@@ -209,14 +230,26 @@ class FedSim:
             return n * int(self.comp.bits_per_message(self._d))
         return n * 32 * self._d
 
-    def _transport_met(self, idx_host, round_idx: int) -> dict:
-        """Simulated-network timing for one round (host-side numpy). With
-        hierarchical aggregation the uplink is billed per tier: n client
-        messages (tier 1, the codec bytes) plus g dense fp32 group partials
-        pushed to the root (tier 2)."""
+    def _round_timing(self, idx_host, round_idx: int):
+        """Simulated-network timing draw for one round (host-side numpy,
+        deterministic in (seed, round)). Runs BEFORE the jitted round when
+        faults are on — the deadline cutoff needs the per-client times to
+        decide who is dead before aggregation."""
+        if self.network is None:
+            return None
         up = self.codec.nbytes(self._d)
         down = self._down_codec.nbytes(self._d)
-        timing = self.network.round(idx_host, up, down, round_idx)
+        return self.network.round(idx_host, up, down, round_idx)
+
+    def _record_timing(self, timing, finfo) -> dict:
+        """Book one round's timing into the CommLog. With hierarchical
+        aggregation the uplink is billed per tier: n client messages
+        (tier 1, the codec bytes) plus g dense fp32 group partials pushed
+        to the root (tier 2). A fault-tolerant round overwrites the
+        server wall-clock with the injector's deadline-truncated value."""
+        if finfo is not None:
+            timing = dataclasses.replace(
+                timing, round_time_s=finfo["round_time_s"])
         g = self.fed.agg_groups
         tier2 = g * 4 * self._d if g > 1 else 0
         return self.comm_log.record(timing, tier2_bytes=tier2)
@@ -240,6 +273,15 @@ class FedSim:
         if self._round_fn is None:
             self._round_fn = jax.jit(self._round_impl, donate_argnums=(0,))
         idx_host = np.asarray(client_idx)
+        # transport runs between jitted rounds: byte counts are static per
+        # codec, the timing draw is host-side numpy; the round index is the
+        # host counter (no device sync). It runs BEFORE the round so the
+        # fault injector can turn per-client times into a deadline mask.
+        timing = self._round_timing(idx_host, state.round)
+        fplan = finfo = None
+        if self.faults is not None:
+            fplan, finfo = self.faults.plan(idx_host, state.round, timing)
+            fplan = FaultPlan(*(jnp.asarray(a) for a in fplan))
         if self._efs is not None:
             rows = self._efs.gather(idx_host)
             core = _CoreState(state.params, state.opt, jnp.asarray(rows),
@@ -249,7 +291,8 @@ class FedSim:
             # per row is bit-identical to the resident (m, d) buffer
             pos_idx = jnp.arange(idx_host.size, dtype=jnp.int32)
             new_core, met = self._round_fn(core, client_batches, pos_idx,
-                                           rng, jnp.int32(state.round))
+                                           rng, jnp.int32(state.round),
+                                           fplan)
             if prefetch_idx is not None:
                 self._efs.prefetch(np.asarray(prefetch_idx))
             # np.asarray blocks on the round; the prefetch above overlaps it
@@ -257,15 +300,15 @@ class FedSim:
         else:
             new_core, met = self._round_fn(_CoreState(*state[:5]),
                                            client_batches, client_idx, rng,
-                                           jnp.int32(state.round))
+                                           jnp.int32(state.round), fplan)
         bits = state.bits + self._bits_per_round(client_idx.shape[0])
         met = dict(met)
         met["bits"] = bits
-        if self.network is not None:
-            # transport runs between jitted rounds: byte counts are static
-            # per codec, the timing draw is host-side numpy; the round
-            # index is the host counter (no device sync)
-            met.update(self._transport_met(idx_host, state.round))
+        if timing is not None:
+            met.update(self._record_timing(timing, finfo))
+        if finfo is not None:
+            met["crashed"] = finfo["crashed"]
+            met["deadline_cut"] = finfo["deadline_cut"]
         return SimState(*new_core, bits=bits, round=state.round + 1), met
 
     # -- many rounds, one device program ------------------------------------
@@ -295,25 +338,45 @@ class FedSim:
                 mets.append(met)
             return st, mets
         if self._scan_fn is None:
-            def scan_rounds(core, batches, idx, keys, rounds):
+            def scan_rounds(core, batches, idx, keys, rounds, fplans):
                 def body(c, inp):
-                    b, i, k, r = inp
-                    return self._round_impl(c, b, i, k, r)
-                return lax.scan(body, core, (batches, idx, keys, rounds))
+                    b, i, k, r, fp = inp
+                    return self._round_impl(c, b, i, k, r, fp)
+                return lax.scan(body, core,
+                                (batches, idx, keys, rounds, fplans))
             self._scan_fn = jax.jit(scan_rounds, donate_argnums=(0,))
         idx_host = np.asarray(client_idx)
+        # host-side transport + fault planning for all R rounds up front
+        # (network.round is deterministic and idempotent per round index);
+        # the plans stack into one (R, n)-leading FaultPlan the scan
+        # consumes as xs — faults never force the loop path
+        timings = [self._round_timing(idx_host[r], state.round + r)
+                   for r in range(R)]
+        fplans = None
+        finfos = [None] * R
+        if self.faults is not None:
+            plans = []
+            for r in range(R):
+                p, finfos[r] = self.faults.plan(idx_host[r], state.round + r,
+                                                timings[r])
+                plans.append(p)
+            fplans = FaultPlan(*(jnp.asarray(np.stack(leaf))
+                                 for leaf in zip(*plans)))
         rounds_dev = state.round + jnp.arange(R, dtype=jnp.int32)
         new_core, stacked = self._scan_fn(_CoreState(*state[:5]),
                                           client_batches, client_idx, rngs,
-                                          rounds_dev)
+                                          rounds_dev, fplans)
         stacked = jax.device_get(stacked)  # the single host sync
         bpr = self._bits_per_round(n)
         mets = []
         for r in range(R):
             met = {k: v[r] for k, v in stacked.items()}
             met["bits"] = state.bits + bpr * (r + 1)
-            if self.network is not None:
-                met.update(self._transport_met(idx_host[r], state.round + r))
+            if timings[r] is not None:
+                met.update(self._record_timing(timings[r], finfos[r]))
+            if finfos[r] is not None:
+                met["crashed"] = finfos[r]["crashed"]
+                met["deadline_cut"] = finfos[r]["deadline_cut"]
             mets.append(met)
         new_state = SimState(*new_core, bits=state.bits + bpr * R,
                              round=state.round + R)
@@ -382,8 +445,93 @@ class FedSim:
         errors = ef_update_sparse(errors, block_idx, idx, sel_vals, rx_vals)
         return errors, rx_vals, idx, tot_rows, delta, losses
 
+    def _fault_round(self, core: _CoreState, client_batches, client_idx, rng,
+                     round_idx, fplan: FaultPlan):
+        """Fault-tolerant round (DESIGN.md §robustness): every client
+        trains and uplinks as usual — the damage is in transit — then the
+        server masks the aggregate down to validated survivors.
+
+        Invariants:
+          * the client books its EF residual against the CLEAN decoded
+            value it sent; corruption happens after booking, so a client
+            whose payload the server rejects (NACK) or who crashed gets
+            its EF row rolled back to the stale pre-round value and
+            repays the residual on rejoin (core/error_feedback.py);
+          * validation runs BEFORE ingest: NaN/Inf and out-of-range
+            indices zero the offender's contribution and drop it from
+            the survivor count, so one poisoned payload cannot reach the
+            FedAMS m/v/v̂ state;
+          * with an all-ones survivor mask and corruption off this is
+            bit-identical to :meth:`_round_impl` (regression-tested).
+        """
+        fed = self.fed
+        fcfg = self.faults.cfg
+        n = client_idx.shape[0]
+        start = self.unravel(core.x_client)
+        flat0 = core.x_client
+        d = flat0.size
+        pos = jnp.arange(n)
+        eta_l = local_lr(fed, round_idx)
+        k_all = hetero_step_counts(fed, rng, n)
+        corrupting = fcfg.corrupt_prob > 0
+        if self.sparse:
+            old_rows = core.errors[client_idx]
+            delta, losses = self._train_block(start, flat0, client_batches,
+                                              rng, eta_l, k_all)
+            tot = old_rows + delta
+            sel_vals, sidx, rx_vals = client_uplink_sparse(
+                self.comp, self.codec, d, rng, tot, pos)
+            # client-side EF books the residual vs the CLEAN decoded value
+            new_rows = jax.vmap(lambda t, i, r_: t.at[i].set(r_))(
+                tot, sidx, sel_vals - rx_vals)
+            rx, ridx = (corrupt_selection(rx_vals, sidx, fplan,
+                                          fcfg.corrupt_mode)
+                        if corrupting else (rx_vals, sidx))
+            vvals, valid = validate_selection(rx, ridx, self._sel_domain,
+                                              fcfg.max_update_norm)
+            surv = fplan.survivors * valid
+            errors = core.errors.at[client_idx].set(
+                jnp.where(surv[:, None] > 0, new_rows, old_rows))
+            agg = server_aggregate_sparse_masked(vvals, ridx, d, surv)
+        else:
+            errs = (core.errors[client_idx] if self.comp is not None
+                    else jnp.zeros((n, 0), jnp.float32))
+            hats, new_errs, delta, losses = self._clients_block(
+                start, flat0, client_batches, errs, pos, rng, eta_l, k_all)
+            rx = (corrupt_dense(hats, fplan, fcfg.corrupt_mode)
+                  if corrupting else hats)
+            truncated = (fplan.corrupt
+                         if corrupting and fcfg.corrupt_mode == "truncate"
+                         else None)
+            vhats, valid = validate_dense(rx, fcfg.max_update_norm,
+                                          truncated)
+            surv = fplan.survivors * valid
+            agg = jnp.sum(jnp.where(surv[:, None] > 0, vhats, 0.0),
+                          axis=0) / jnp.maximum(jnp.sum(surv), 1.0)
+            if self.comp is not None:
+                errors = core.errors.at[client_idx].set(
+                    jnp.where(surv[:, None] > 0, new_errs, errs))
+            else:
+                errors = core.errors
+        loss = jnp.mean(losses)  # cohort mean — training happened on every
+        # client whether or not its uplink survived
+        xflat, _ = ravel_pytree(core.params)
+        new_flat, opt = server_update(fed, core.opt, xflat, agg)
+        x_client, server_error = server_downlink(
+            fed, self.comp, self.codec, d, rng, new_flat, core.x_client,
+            core.server_error)
+        new_core = _CoreState(self.unravel(new_flat), opt, errors,
+                              server_error, x_client)
+        met = {"loss": loss, "gamma": jnp.zeros(()),
+               "survivors": jnp.sum(surv),
+               "rejected": jnp.sum(fplan.survivors * (1.0 - valid))}
+        return new_core, met
+
     def _round_impl(self, core: _CoreState, client_batches, client_idx, rng,
-                    round_idx):
+                    round_idx, fplan: Optional[FaultPlan] = None):
+        if fplan is not None:
+            return self._fault_round(core, client_batches, client_idx, rng,
+                                     round_idx, fplan)
         fed = self.fed
         n = client_idx.shape[0]
         start = self.unravel(core.x_client)  # what clients see (== params

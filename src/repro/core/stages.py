@@ -169,6 +169,22 @@ def server_aggregate_sparse_grouped(vals, idx, d: int, n: int, groups: int):
     return jnp.sum(partials, axis=0) / n
 
 
+def server_aggregate_sparse_masked(vals, idx, d: int, surv):
+    """Survivor-masked sibling of :func:`server_aggregate_sparse`
+    (DESIGN.md §robustness): mean of the sparse client messages over the
+    SURVIVORS only — ``surv`` (n,) f32 is the fault-round survivor mask
+    (delivered ∧ validated). Non-survivor entries are replaced by 0 with
+    ``where`` (never multiply: a poisoned NaN times 0.0 is still NaN) and
+    the divisor is the survivor count (min 1 — an all-dead round yields a
+    zero aggregate, not a NaN). With an all-ones mask this is bit-identical
+    to :func:`server_aggregate_sparse`: same scatter order, and the traced
+    f32 count equals the Python ``n`` the unmasked path divides by."""
+    contrib = jnp.where(surv[:, None] > 0, vals, 0.0)
+    n_surv = jnp.maximum(jnp.sum(surv), 1.0)
+    return jnp.zeros(d, jnp.float32).at[idx.reshape(-1)].add(
+        contrib.reshape(-1)) / n_surv
+
+
 def server_downlink(fed: FedConfig, comp: Optional[Compressor], codec,
                     d: int, rng, new_flat, x_client, server_error):
     """Two-way (server→client) EF compression, paper appendix D.
@@ -358,6 +374,36 @@ def sparse_topk_leaf(sel: Selection, leaf, n_eff, ctx: ParallelContext):
     zeros = jnp.zeros(d, jnp.float32)
     agg = zeros.at[g_idx].add(g_vals) / n_eff
     return agg.reshape(leaf.shape)
+
+
+def sparse_topk_leaf_validated(sel: Selection, leaf, mask,
+                               ctx: ParallelContext, domain: int,
+                               max_norm: float):
+    """Fault-tolerant sibling of :func:`sparse_topk_leaf` (DESIGN.md
+    §robustness): the gathered ``(vals, idx)`` selections pass the
+    server's validation-before-ingest gate (NaN/Inf rejection, index-range
+    check against the leaf's padded block ``domain``, optional per-client
+    norm clip) and the scatter-mean runs over the combined survivor mask
+    ``alive ∧ valid`` — an invalid payload contributes nothing and shrinks
+    the divisor, so one poisoned client cannot corrupt the aggregate.
+
+    ``mask``: (m,) f32 alive-mask (participation ∧ fault). Returns
+    ``(agg, my_valid, rejected)``: the aggregated leaf, THIS device's own
+    validity (every device sees the gathered copies, including its own
+    damaged payload, so the NACK needs no extra collective), and the
+    count of delivered-but-rejected clients for this leaf."""
+    d = leaf.size
+    from repro.comm.faults import validate_selection
+    g_vals = ctx.all_gather_clients(sel.vals[None], axis=0)   # (m, k)
+    g_idx = ctx.all_gather_clients(sel.idx[None], axis=0)     # (m, k)
+    vvals, valid = validate_selection(g_vals, g_idx, domain, max_norm)
+    surv = mask * valid
+    contrib = jnp.where(surv[:, None] > 0, vvals, 0.0)
+    zeros = jnp.zeros(d, jnp.float32)
+    agg = zeros.at[g_idx.reshape(-1)].add(contrib.reshape(-1)) \
+        / jnp.maximum(jnp.sum(surv), 1.0)
+    rejected = jnp.sum(mask * (1.0 - valid))
+    return agg.reshape(leaf.shape), valid[ctx.client_index()], rejected
 
 
 def sparse_topk_hier_leaf(sel: Selection, leaf, n_eff,

@@ -152,10 +152,11 @@ def build_train_step(spec: ArchSpec, shape: ShapeConfig, mesh,
 
     rnd = build_fed_round(model, fed, train, ctx, chunk=chunk,
                           kernel_impl=kernel_impl)
+    from repro.core.mesh import mesh_metric_specs
     fn = jax.jit(compat.shard_map(
         rnd, mesh=mesh,
         in_specs=(state_specs, batch_specs, P()),
-        out_specs=(state_specs, {"loss": P(), "wire_up_bytes": P()}),
+        out_specs=(state_specs, mesh_metric_specs(fed)),
         check_vma=True))
     abstract = (pdefs.abstract_params(sdefs, mesh),
                 pdefs.abstract_params(bdefs, mesh),

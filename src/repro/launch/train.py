@@ -78,6 +78,26 @@ def main(argv=None) -> None:
                     help="heterogeneous per-client local work: client i "
                          "runs K_i ~ U{min..K} steps (0 = homogeneous)")
     ap.add_argument("--participating", type=int, default=0)
+    ap.add_argument("--crash-prob", type=float, default=0.0,
+                    help="fault injection (DESIGN.md §robustness): P(a "
+                         "client crashes per round); crashed clients drop "
+                         "out of the masked survivor aggregate and keep "
+                         "stale EF residuals")
+    ap.add_argument("--corrupt-prob", type=float, default=0.0,
+                    help="P(a delivered payload was damaged in transit); "
+                         "the server validates before ingest and rejects "
+                         "offenders (needs --aggregation sparse with a "
+                         "topk-family --compressor)")
+    ap.add_argument("--corrupt-mode", default="nan",
+                    choices=("nan", "inf", "bitflip", "truncate"))
+    ap.add_argument("--max-update-norm", type=float, default=0.0,
+                    help="per-client L2 clip applied to validated payloads "
+                         "before ingest (0 = off)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="FedSim wire-mode only; the mesh driver rejects "
+                         "it (no transport clock) — model stragglers as "
+                         "crashes here")
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--eta-l", type=float, default=0.05)
     ap.add_argument("--use-kernels", action="store_true")
@@ -124,6 +144,19 @@ def main(argv=None) -> None:
     else:
         mesh = make_mesh((args.dp, args.tp), ("data", "model"))
         client_axes = ("data",) if args.dp > 1 else ()
+    if args.deadline_s > 0:
+        ap.error("--deadline-s is FedSim wire-mode only — the mesh driver "
+                 "has no transport clock to cut against; use --crash-prob "
+                 "to model dropouts here")
+    fault = None
+    if args.crash_prob > 0 or args.corrupt_prob > 0 \
+            or args.max_update_norm > 0:
+        from repro.comm.faults import FaultConfig
+        fault = FaultConfig(crash_prob=args.crash_prob,
+                            corrupt_prob=args.corrupt_prob,
+                            corrupt_mode=args.corrupt_mode,
+                            max_update_norm=args.max_update_norm,
+                            seed=args.fault_seed)
     fed = FedConfig(algorithm=args.algorithm, compressor=args.compressor,
                     compress_ratio=args.ratio, aggregation=args.aggregation,
                     agg_groups=args.agg_groups,
@@ -137,7 +170,11 @@ def main(argv=None) -> None:
                     local_steps_min=args.local_steps_min,
                     participating=args.participating, eta=args.eta,
                     eta_l=args.eta_l,
-                    client_axes=client_axes)
+                    client_axes=client_axes,
+                    # the γ diagnostic consumes the full-cohort dense mean,
+                    # which a partial (fault-tolerant) round never computes
+                    track_gamma=fault is None,
+                    fault=fault)
     train = TrainConfig(global_batch=args.global_batch, seq_len=args.seq_len,
                         rounds=args.rounds, remat_policy="none")
     model = Model(cfg, tp=args.tp)
@@ -158,10 +195,11 @@ def main(argv=None) -> None:
     batch_specs = jax.tree.map(lambda d: d.spec, bdefs, is_leaf=pdefs.is_def)
     # donate the federated state: params/opt-moments/EF errors update in
     # place instead of being copied every round
+    from repro.core.mesh import mesh_metric_specs
     step = jax.jit(compat.shard_map(rnd, mesh=mesh,
                                  in_specs=(state_specs, batch_specs, P()),
                                  out_specs=(state_specs,
-                                            {"loss": P(), "wire_up_bytes": P()}),
+                                            mesh_metric_specs(fed)),
                                  check_vma=True),
                    donate_argnums=(0,))
     scan_step = None
@@ -170,8 +208,7 @@ def main(argv=None) -> None:
         scan_step = jax.jit(compat.shard_map(
             build_fed_rounds_scan(rnd), mesh=mesh,
             in_specs=(state_specs, scan_batch_specs(batch_specs), P(None)),
-            out_specs=(state_specs, {"loss": P(None),
-                                     "wire_up_bytes": P(None)}),
+            out_specs=(state_specs, mesh_metric_specs(fed, scan=True)),
             check_vma=True), donate_argnums=(0,))
     state = init_fed_state(model, fed, jax.random.PRNGKey(train.seed))
     nparams = sum(int(np.prod(l.shape))
@@ -205,8 +242,12 @@ def main(argv=None) -> None:
             batch = {k: jnp.asarray(v) for k, v in raw.items()}
             state, met = step(state, batch, jnp.int32(r))
             if r % args.log_every == 0 or r == train.rounds - 1:
+                extra = ""
+                if "survivors" in met:
+                    extra = (f"surv {float(met['survivors']):3.0f}  "
+                             f"rej {float(met['rejected']):3.0f}  ")
                 print(f"round {r:4d}  loss {float(met['loss']):8.4f}  "
-                      f"({time.time() - t0:.1f}s)")
+                      f"{extra}({time.time() - t0:.1f}s)")
     if args.checkpoint:
         from repro.checkpoint import save_pytree
         save_pytree(args.checkpoint, jax.device_get(state._asdict()),

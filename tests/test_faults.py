@@ -1,0 +1,383 @@
+"""Fault-tolerant rounds (DESIGN.md §robustness): deterministic
+injection, deadline cutoff, wire corruption + validation-before-ingest,
+survivor-masked aggregation parity, and EF semantics under drops — on
+FedSim and (subprocess) the forced-8-device mesh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (FaultConfig, FaultInjector, FaultPlan,
+                        NetworkConfig, SimulatedNetwork)
+from repro.comm.faults import (INVALID_IDX, corrupt_dense, corrupt_selection,
+                               validate_dense, validate_selection)
+from repro.comm.transport import RoundTiming
+from repro.configs.base import FedConfig
+from repro.core.rounds import FedSim
+from repro.core.sampling import sample_clients
+from repro.data.synthetic import FederatedClassification
+from repro.models import params as pdefs
+from repro.models.convmixer import MLPConfig, mlp_defs, mlp_loss
+
+pytestmark = pytest.mark.faults
+
+MC = MLPConfig(in_dim=16, hidden=32, depth=2, num_classes=4)
+DATA = FederatedClassification(num_clients=8, num_classes=4, feature_dim=16,
+                               alpha=0.5, seed=0)
+
+
+# -- config validation -------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(crash_prob=1.5), dict(crash_prob=-0.1), dict(corrupt_prob=2.0),
+    dict(corrupt_mode="zap"), dict(deadline_s=-1.0),
+    dict(max_update_norm=-2.0), dict(crash_trace=((0, 5, 1),)),
+    dict(crash_trace=((-1, 0, 1),)),
+])
+def test_faultconfig_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        FaultConfig(**kw)
+
+
+def test_fedconfig_fault_validation():
+    base = dict(algorithm="fedcams", compressor="blocktopk",
+                compress_ratio=1 / 8, track_gamma=False)
+    FedConfig(fault=FaultConfig(), **base)                 # fine
+    FedConfig(deadline_s=1.0, wire=True, **base)           # fine
+    with pytest.raises(ValueError, match="track_gamma"):
+        FedConfig(fault=FaultConfig(),
+                  **dict(base, track_gamma=True))
+    with pytest.raises(ValueError, match="wire"):
+        FedConfig(deadline_s=1.0, **base)
+    with pytest.raises(ValueError, match="pick one"):
+        FedConfig(deadline_s=1.0, wire=True,
+                  fault=FaultConfig(deadline_s=2.0), **base)
+    with pytest.raises(ValueError, match="agg_groups"):
+        FedConfig(fault=FaultConfig(), agg_groups=2, **base)
+    with pytest.raises(ValueError, match="client_chunk"):
+        FedConfig(fault=FaultConfig(), client_chunk=2, **base)
+    with pytest.raises(ValueError, match="FaultConfig"):
+        FedConfig(fault={"crash_prob": 0.5}, **base)
+
+
+# -- injector ----------------------------------------------------------------
+
+
+def _timing(times):
+    times = np.asarray(times, np.float64)
+    return RoundTiming(round_time_s=float(times.max(initial=0.0)),
+                       uplink_bytes=0, downlink_bytes=0, slowest_client=-1,
+                       mean_client_time_s=0.0, client_times_s=times)
+
+
+def test_injector_deterministic_in_config_and_round():
+    cfg = FaultConfig(crash_prob=0.3, corrupt_prob=0.2, seed=7)
+    a, b = FaultInjector(cfg, 100), FaultInjector(cfg, 100)
+    idx = np.arange(10)
+    for r in range(5):
+        pa, ia = a.plan(idx, r)
+        pb, ib = b.plan(idx, r)
+        for la, lb in zip(pa, pb):
+            assert np.array_equal(la, lb)
+        assert ia == ib
+    draws = {tuple(a.plan(idx, r)[0].survivors.tolist()) for r in range(12)}
+    assert len(draws) > 1        # the stream actually varies per round
+
+
+def test_crash_trace_windows():
+    cfg = FaultConfig(crash_trace=((3, 1, 4), (5, 0, 10 ** 9)))
+    inj = FaultInjector(cfg, 10)
+    idx = np.array([1, 3, 5])
+    for r in range(6):
+        plan, info = inj.plan(idx, r)
+        assert plan.survivors[0] == 1.0                      # untouched id
+        assert plan.survivors[1] == (0.0 if 1 <= r < 4 else 1.0)
+        assert plan.survivors[2] == 0.0                      # persistent
+        assert info["crashed"] == 1.0 + (1 <= r < 4)
+
+
+def test_deadline_cut_and_round_time():
+    inj = FaultInjector(FaultConfig(deadline_s=1.0), 8)
+    times = np.array([0.5, 2.0, 0.9, 1.5])
+    plan, info = inj.plan(np.arange(4), 0, _timing(times))
+    assert np.array_equal(plan.survivors, [1.0, 0.0, 1.0, 0.0])
+    assert info["deadline_cut"] == 2.0 and info["survivors"] == 2.0
+    assert info["round_time_s"] == 1.0     # truncated: someone missed it
+    plan2, info2 = inj.plan(np.arange(4), 0,
+                            _timing(np.array([0.1, 0.2, 0.3, 0.4])))
+    assert plan2.survivors.sum() == 4.0
+    assert info2["round_time_s"] == pytest.approx(0.4)  # nobody cut
+    with pytest.raises(ValueError, match="RoundTiming"):
+        inj.plan(np.arange(4), 0, None)    # deadline needs the clock
+
+
+def test_crashes_drop_out_of_round_time_without_deadline():
+    inj = FaultInjector(FaultConfig(crash_trace=((1, 0, 10),)), 8)
+    _, info = inj.plan(np.arange(4), 0,
+                       _timing(np.array([0.5, 2.0, 0.9, 1.5])))
+    assert info["round_time_s"] == pytest.approx(1.5)   # 2.0s client crashed
+
+
+# -- corruption + validation-before-ingest ----------------------------------
+
+
+def _plan(corrupt, xor=0x20000001, keep=0.5):
+    c = np.asarray(corrupt, np.float32)
+    return FaultPlan(
+        survivors=np.ones_like(c),
+        corrupt=c,
+        xor_bits=np.where(c > 0, np.uint32(xor), np.uint32(0)),
+        trunc_keep=np.where(c > 0, np.float32(keep), np.float32(1.0)))
+
+
+def _sel(n=3, k=8, domain=64):
+    r = np.random.default_rng(0)
+    vals = jnp.asarray(r.normal(size=(n, k)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, domain, size=(n, k)), jnp.int32)
+    return vals, idx
+
+
+@pytest.mark.parametrize("mode", ["nan", "inf", "bitflip", "truncate"])
+def test_corrupt_then_validate_rejects_only_offenders(mode):
+    vals, idx = _sel()
+    cv, cidx = corrupt_selection(vals, idx, _plan([1.0, 0.0, 0.0]), mode)
+    # clean clients' payloads pass through untouched
+    assert np.array_equal(np.asarray(cv[1:]), np.asarray(vals[1:]))
+    assert np.array_equal(np.asarray(cidx[1:]), np.asarray(idx[1:]))
+    out, valid = validate_selection(cv, cidx, 64)
+    assert np.array_equal(np.asarray(valid), [0.0, 1.0, 1.0]), mode
+    assert np.all(np.asarray(out[0]) == 0.0)       # zeroed, not masked-NaN
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.array_equal(np.asarray(out[1:]), np.asarray(vals[1:]))
+
+
+def test_truncate_marks_suffix_invalid():
+    vals, idx = _sel(n=1, k=8)
+    cv, cidx = corrupt_selection(vals, idx, _plan([1.0], keep=0.5),
+                                 "truncate")
+    cut = np.asarray(cidx[0]) == INVALID_IDX
+    assert 0 < cut.sum() < 8                  # a strict suffix was cut
+    assert np.all(np.asarray(cv[0])[cut] == 0.0)
+
+
+def test_padded_tail_indices_pass_validation():
+    # legit padded-tail entries index into [d, bs*nb) — the domain check
+    # must accept them (they scatter into the zero-padded tail)
+    vals = jnp.ones((1, 4), jnp.float32)
+    idx = jnp.asarray([[0, 5, 62, 63]], jnp.int32)   # d=60, domain=64
+    _, valid = validate_selection(vals, idx, 64)
+    assert valid[0] == 1.0
+    _, invalid = validate_selection(vals, jnp.asarray([[0, 5, 64, 63]],
+                                                      jnp.int32), 64)
+    assert invalid[0] == 0.0
+
+
+def test_validate_selection_norm_clip():
+    vals = jnp.full((2, 4), 5.0, jnp.float32)        # L2 = 10 per client
+    idx = jnp.zeros((2, 4), jnp.int32)
+    out, valid = validate_selection(vals, idx, 8, max_norm=1.0)
+    assert np.all(np.asarray(valid) == 1.0)          # clipped, not rejected
+    norms = np.linalg.norm(np.asarray(out), axis=-1)
+    assert np.allclose(norms, 1.0, rtol=1e-5)
+
+
+def test_validate_dense_rejects_nonfinite_and_truncated():
+    hats = jnp.asarray(np.random.default_rng(1).normal(size=(3, 16)),
+                       jnp.float32)
+    bad = hats.at[0, 3].set(jnp.nan)
+    out, valid = validate_dense(bad)
+    assert np.array_equal(np.asarray(valid), [0.0, 1.0, 1.0])
+    assert np.isfinite(np.asarray(out)).all()
+    _, v2 = validate_dense(hats, truncated=jnp.asarray([0.0, 1.0, 0.0]))
+    assert np.array_equal(np.asarray(v2), [1.0, 0.0, 1.0])
+    cd = corrupt_dense(hats, _plan([1.0, 0.0, 0.0]), "nan")
+    assert np.isnan(np.asarray(cd[0])).any()
+    assert np.array_equal(np.asarray(cd[1:]), np.asarray(hats[1:]))
+
+
+# -- FedSim: fault rounds end-to-end ----------------------------------------
+
+
+def _run_sim(fault, *, m=8, n=4, rounds=6, seed=0, edit_row0_at=None,
+             network=None, snapshots=False, scan=False, **fed_kw):
+    fed = FedConfig(algorithm="fedcams", eta=0.05, eta_l=0.1, local_steps=2,
+                    num_clients=m, participating=n, compressor="blocktopk",
+                    compress_ratio=1 / 8, track_gamma=False, fault=fault,
+                    **fed_kw)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed, network=network)
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(seed)))
+    rng = jax.random.PRNGKey(seed + 1)
+    staged = []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, m, n))
+        staged.append((idx, DATA.round_batches(idx, r, 2, 8), k2))
+    if scan:
+        batches = jax.tree.map(
+            lambda *xs: jnp.asarray(np.stack(xs)), *[s[1] for s in staged])
+        idxs = jnp.asarray(np.stack([s[0] for s in staged]))
+        keys = jnp.stack([s[2] for s in staged])
+        st, mets = sim.run_rounds(st, batches, idxs, keys)
+        return mets, st, []
+    mets, snaps = [], []
+    for r, (idx, b, k2) in enumerate(staged):
+        if edit_row0_at == r:
+            err = np.asarray(st.errors).copy()
+            err[0] = 0.0
+            st = st._replace(errors=jnp.asarray(err))
+        st, met = sim.round(st, jax.tree.map(jnp.asarray, b),
+                            jnp.asarray(idx), k2)
+        mets.append(met)
+        if snapshots:
+            snaps.append(np.asarray(st.errors).copy())
+    return mets, st, snaps
+
+
+def _flat_state(st):
+    return np.concatenate([np.asarray(leaf).ravel()
+                           for leaf in jax.tree.leaves(st.params)]
+                          + [np.asarray(st.errors).ravel()])
+
+
+@pytest.mark.parametrize("fed_kw", [
+    dict(),                                         # select-once sparse path
+    dict(sparse_uplink=False),                      # dense reference path
+    dict(wire=True),                                # wire codec in the loop
+], ids=["sparse", "dense", "wire"])
+def test_allones_fault_plan_is_bitwise_noop(fed_kw):
+    """FaultConfig() enables the masked machinery with nobody failing —
+    losses and state must be bit-identical to the fault-free build."""
+    net = (lambda: SimulatedNetwork(NetworkConfig(seed=3), 8)) \
+        if fed_kw.get("wire") else (lambda: None)
+    base, st0, _ = _run_sim(None, network=net(), **fed_kw)
+    par, st1, _ = _run_sim(FaultConfig(), network=net(), **fed_kw)
+    assert [float(m["loss"]) for m in base] == \
+        [float(m["loss"]) for m in par]
+    assert np.array_equal(_flat_state(st0), _flat_state(st1))
+    assert all(float(m["survivors"]) == 4.0 and float(m["rejected"]) == 0.0
+               for m in par)
+
+
+def test_scan_matches_loop_under_faults():
+    fault = FaultConfig(crash_prob=0.3, corrupt_prob=0.3, seed=5)
+    loop, st_l, _ = _run_sim(fault)
+    scan, st_s, _ = _run_sim(fault, scan=True)
+    assert [float(m["loss"]) for m in loop] == \
+        [float(m["loss"]) for m in scan]
+    assert [float(m["survivors"]) for m in loop] == \
+        [float(m["survivors"]) for m in scan]
+    assert np.array_equal(_flat_state(st_l), _flat_state(st_s))
+
+
+@pytest.mark.parametrize("mode", ["nan", "inf", "bitflip", "truncate"])
+def test_corruption_rejected_before_ingest(mode):
+    mets, st, _ = _run_sim(FaultConfig(corrupt_prob=0.5, corrupt_mode=mode,
+                                       seed=2))
+    assert sum(float(m["rejected"]) for m in mets) > 0
+    assert np.isfinite(_flat_state(st)).all()
+    assert all(np.isfinite(float(m["loss"])) for m in mets)
+
+
+def test_deadline_truncates_round_time_and_cuts_stragglers():
+    net = SimulatedNetwork(NetworkConfig(straggler_prob=0.5,
+                                         straggler_slowdown=50.0, seed=1), 8)
+    mets, st, _ = _run_sim(FaultConfig(deadline_s=1.0), network=net,
+                           wire=True)
+    cut = sum(float(m["deadline_cut"]) for m in mets)
+    assert cut > 0
+    for m in mets:
+        assert m["round_time_s"] <= 1.0
+        assert float(m["survivors"]) == 4.0 - float(m["deadline_cut"])
+    assert np.isfinite(_flat_state(st)).all()
+
+
+def test_crashed_client_keeps_stale_residual():
+    fault = FaultConfig(crash_trace=((0, 1, 3),))
+    _, _, snaps = _run_sim(fault, m=4, n=4, rounds=4, snapshots=True)
+    stale = snaps[0][0]
+    assert np.array_equal(snaps[1][0], stale)      # dead: row untouched
+    assert np.array_equal(snaps[2][0], stale)
+    assert (snaps[1][1:] != snaps[0][1:]).any()    # the living moved on
+    assert not np.array_equal(snaps[3][0], stale)  # rejoined: repaid
+
+
+def test_rejoin_repays_exact_residual_vs_zeroed_twin():
+    """Dropped client repays exactly its accumulated residual on rejoin.
+
+    Twin runs share one jitted round program, so the rejoin-round delta
+    for client 0 is bit-identical between them; EF rows are the uplink
+    totals with exactly the selected coordinates zeroed, so off both
+    selection supports run A's row must equal ``stale + (run Z's row)``
+    — the same IEEE f32 add the round computed in-trace. The residual
+    must also shift the selection itself (it is selected FROM
+    ``stale + delta``, not from ``delta``)."""
+    fault = FaultConfig(crash_trace=((0, 1, 3),))
+    _, _, sa = _run_sim(fault, m=4, n=4, rounds=4, snapshots=True)
+    _, _, sz = _run_sim(fault, m=4, n=4, rounds=4, snapshots=True,
+                        edit_row0_at=3)
+    stale, ea, ez = sa[0][0], sa[3][0], sz[3][0]
+    assert np.array_equal(sz[2][0], stale)     # twin identical pre-edit
+    off = (ea != 0.0) & (ez != 0.0)
+    assert off.sum() > 100
+    assert np.array_equal(ea[off], (stale[off] + ez[off]))
+    assert ((ea == 0.0) != (ez == 0.0)).any()
+
+
+def test_loss_within_2x_of_faultfree_under_nan_injection():
+    base, _, _ = _run_sim(None, rounds=10)
+    nan, _, _ = _run_sim(FaultConfig(corrupt_prob=0.1, corrupt_mode="nan",
+                                     seed=4), rounds=10)
+    assert float(nan[-1]["loss"]) <= 2.0 * float(base[-1]["loss"])
+
+
+def test_fault_config_from_deadline_shorthand():
+    """FedConfig(deadline_s=...) alone must arm the injector."""
+    net = SimulatedNetwork(NetworkConfig(straggler_prob=0.5,
+                                         straggler_slowdown=50.0, seed=1), 8)
+    fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                    compress_ratio=1 / 8, num_clients=8, participating=4,
+                    local_steps=2, eta=0.05, eta_l=0.1, wire=True,
+                    track_gamma=False, deadline_s=1.0)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed, network=net)
+    assert sim.faults is not None
+    assert sim.faults.cfg.deadline_s == 1.0
+
+
+def test_fault_replaces_deadline_into_config():
+    fault = FaultConfig(crash_prob=0.1)
+    fed = FedConfig(algorithm="fedcams", compressor="blocktopk",
+                    compress_ratio=1 / 8, num_clients=8, wire=True,
+                    track_gamma=False, deadline_s=0.5, fault=fault)
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed)
+    assert sim.faults.cfg == dataclasses.replace(fault, deadline_s=0.5)
+
+
+# -- forced-8-device mesh ----------------------------------------------------
+
+
+@pytest.mark.slow
+def test_mesh_fault_rounds_forced_devices():
+    """Mesh backend: all-ones parity, stale-then-repay EF semantics, and
+    NaN NACK rollback — one subprocess, 8 fake devices (see
+    tests/fault_mesh_harness.py for the per-check contracts)."""
+    from conftest import forced_devices_json
+    out = forced_devices_json(
+        "import json, fault_mesh_harness as h\n"
+        "print(json.dumps(h.run_all()))\n")
+    par = out["parity"]
+    assert par["loss_bitwise"] and par["params_bitwise"] \
+        and par["errors_bitwise"], par
+    assert par["survivors"] == [8.0, 8.0, 8.0]
+    rj = out["rejoin"]
+    assert rj["stale_r1_bitwise"] and rj["stale_r2_bitwise"], rj
+    assert rj["others_moved_r1"]
+    assert rj["off_support_count"] > 100
+    assert rj["repay_bitwise"], rj
+    assert rj["selection_shifted_by_residual"]
+    assert rj["survivors"] == [8.0, 7.0, 7.0, 8.0]
+    cr = out["corruption"]
+    assert cr["any_rejected"] and cr["state_finite"] and cr["loss_finite"]
+    assert cr["nack_rows_match_rejected"], cr

@@ -261,6 +261,44 @@ def test_network_requires_wire_mode():
                FedConfig(algorithm="fedcams", num_clients=12), network=net)
 
 
+def test_links_for_vectorized_matches_per_id_draw():
+    """The batched cold-path draw + searchsorted warm path must reproduce
+    the original per-client loop's stream bit-for-bit: one Generator
+    keyed (seed, id), two normals, independent of participation order."""
+    cfg = NetworkConfig(seed=5)
+    net = SimulatedNetwork(cfg, 1000)
+    idx = np.array([7, 3, 500, 3, 999, 0])
+    up, down = net._links_for(idx)
+    mu = -0.5 * cfg.bandwidth_sigma ** 2
+    for i, c in enumerate(idx):
+        raw = np.random.default_rng((cfg.seed, int(c))).normal(
+            mu, cfg.bandwidth_sigma, 2)
+        assert up[i] == cfg.uplink_mbps * 1e6 / 8.0 * np.exp(raw[0])
+        assert down[i] == cfg.downlink_mbps * 1e6 / 8.0 * np.exp(raw[1])
+    # warm path (everything cached) returns the same values
+    up2, down2 = net._links_for(idx)
+    assert np.array_equal(up, up2) and np.array_equal(down, down2)
+    # a fresh network sharing the seed agrees, different arrival order
+    net2 = SimulatedNetwork(cfg, 1000)
+    up3, down3 = net2._links_for(np.array([999, 0]))
+    assert up3[0] == up[4] and down3[1] == down[5]
+
+
+def test_round_timing_quantiles():
+    net = SimulatedNetwork(NetworkConfig(seed=2), 64)
+    t = net.round(np.arange(64), 10_000, 10_000, 0)
+    per = t.client_times_s
+    assert t.p50_client_time_s == float(np.percentile(per, 50))
+    assert t.p90_client_time_s == float(np.percentile(per, 90))
+    assert t.p50_client_time_s <= t.p90_client_time_s <= t.round_time_s
+
+
+def test_round_timing_empty_cohort_quantiles():
+    t = SimulatedNetwork(NetworkConfig(), 4).round([], 1000, 1000, 0)
+    assert t.p50_client_time_s == 0.0 and t.p90_client_time_s == 0.0
+    assert t.round_time_s == 0.0 and t.mean_client_time_s == 0.0
+
+
 def test_transport_straggler_stretches_tail():
     base = NetworkConfig(straggler_prob=0.0, latency_jitter_ms=0.0, seed=3)
     strag = NetworkConfig(straggler_prob=1.0, straggler_slowdown=5.0,
