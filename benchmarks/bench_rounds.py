@@ -647,45 +647,8 @@ def _time_to_loss(losses, times, target: float) -> float:
     return float("inf")
 
 
-def _run_robust_arm(staged, fault, deadline_s: float) -> dict:
-    """One robustness arm: scan-driven FedSim run on the shared staged
-    inputs and a fresh (deterministic) straggler-heavy network."""
-    from repro.comm import NetworkConfig, SimulatedNetwork
-    from repro.comm.faults import FaultConfig  # noqa: F401 (callers build)
-    batches, idx, keys = staged
-    cfg = ROBUST
-    mc = MLPConfig(**cfg["mlp"])
-    fed = FedConfig(local_steps=cfg["local_steps"], fault=fault,
-                    deadline_s=deadline_s, **ROBUST_FED_KW)
-    net = SimulatedNetwork(
-        NetworkConfig(straggler_prob=0.2, straggler_slowdown=8.0, seed=0),
-        ROBUST_FED_KW["num_clients"])
-    sim = FedSim(lambda p, b: mlp_loss(p, b, mc), fed, network=net)
-    st = sim.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
-    st, mets = sim.run_rounds(st, batches, idx, keys)
-    n = ROBUST_FED_KW["participating"]
-    losses = [float(m["loss"]) for m in mets]
-    times = [float(m["round_time_s"]) for m in mets]
-    return {
-        "losses": losses,
-        "final_loss": losses[-1],
-        "round_times_s": times,
-        "sim_time_s": float(np.sum(times)),
-        "mean_survivors": float(np.mean(
-            [float(m.get("survivors", n)) for m in mets])),
-        "rejected_total": float(np.sum(
-            [float(m.get("rejected", 0.0)) for m in mets])),
-    }
-
-
-def measure_robustness(rounds: int) -> dict:
-    """The robustness dimension: fault-free baseline, the all-ones-mask
-    bitwise-parity arm, the (crash_prob × deadline) grid, and the
-    corruption arms. Asserts the acceptance invariants inline — parity is
-    bitwise, NaN injection keeps the loss finite and within 2x of
-    fault-free, deadline-cutoff time-to-loss beats wait-for-all on the
-    straggler-heavy network."""
-    from repro.comm.faults import FaultConfig
+def _stage_robust(rounds: int):
+    """Shared staged inputs for every robustness / time-to-loss arm."""
     cfg = ROBUST
     m, n = ROBUST_FED_KW["num_clients"], ROBUST_FED_KW["participating"]
     data = FederatedClassification(num_clients=m,
@@ -700,8 +663,86 @@ def measure_robustness(rounds: int) -> dict:
                                           cfg["batch"]))
         idxs.append(idx)
         keys.append(k2)
-    staged = (jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches),
-              jnp.asarray(np.stack(idxs)), jnp.stack(keys))
+    return (jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches),
+            jnp.asarray(np.stack(idxs)), jnp.stack(keys))
+
+
+def _run_robust_arm(staged, fault, deadline_s: float, *,
+                    straggler: float = 0.2, async_buffer: int = 0,
+                    staleness: str = "inv_sqrt") -> dict:
+    """One robustness / time-to-loss arm: scan-driven FedSim run on the
+    shared staged inputs and a fresh (deterministic) straggler network.
+    With ``async_buffer > 0`` the run goes through the event-driven
+    buffered engine, so the per-entry metrics are per FLUSH, not per
+    staged cohort. Uplink bytes are reported delivered/attempted
+    separately (the CommLog split) — a deadline or async arm's wire bill
+    counts only payloads the server saw."""
+    from repro.comm import NetworkConfig, SimulatedNetwork
+    from repro.comm.faults import FaultConfig  # noqa: F401 (callers build)
+    batches, idx, keys = staged
+    cfg = ROBUST
+    mc = MLPConfig(**cfg["mlp"])
+    fed = FedConfig(local_steps=cfg["local_steps"], fault=fault,
+                    deadline_s=deadline_s, async_buffer=async_buffer,
+                    staleness_weight=staleness, **ROBUST_FED_KW)
+    net = SimulatedNetwork(
+        NetworkConfig(straggler_prob=straggler, straggler_slowdown=8.0,
+                      seed=0),
+        ROBUST_FED_KW["num_clients"])
+    sim = FedSim(lambda p, b: mlp_loss(p, b, mc), fed, network=net)
+    st = sim.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+    st, mets = sim.run_rounds(st, batches, idx, keys)
+    n = ROBUST_FED_KW["participating"]
+    losses = [float(m["loss"]) for m in mets]
+    times = [float(m["round_time_s"]) for m in mets]
+    return {
+        "losses": losses,
+        "final_loss": losses[-1],
+        "round_times_s": times,
+        "sim_time_s": float(np.sum(times)),
+        "entries": len(mets),   # cohorts (sync) or flushes (async)
+        "uplink_bytes_delivered": int(sim.comm_log.uplink_bytes),
+        "uplink_bytes_attempted": int(sim.comm_log.uplink_bytes_attempted),
+        "mean_survivors": float(np.mean(
+            [float(m.get("survivors", n)) for m in mets])),
+        "rejected_total": float(np.sum(
+            [float(m.get("rejected", 0.0)) for m in mets])),
+        "staleness_max": float(np.max(
+            [float(m.get("staleness_max", 0.0)) for m in mets])),
+    }
+
+
+def _probe_dstar(staged, straggler: float) -> float:
+    """Deadline for the cutoff arm: ~2·p50 of the round-0 cohort's
+    per-client times passes every clean client (jitter included) and
+    cuts the 8x stragglers. The probe network is a fresh instance with
+    the arm's seed — draws are keyed by (seed, id)/(seed, round, id), so
+    the arms see identical links and straggler fates."""
+    from repro.comm import NetworkConfig, SimulatedNetwork
+    cfg = ROBUST
+    net = SimulatedNetwork(
+        NetworkConfig(straggler_prob=straggler, straggler_slowdown=8.0,
+                      seed=0),
+        ROBUST_FED_KW["num_clients"])
+    mc = MLPConfig(**cfg["mlp"])
+    fed0 = FedConfig(local_steps=cfg["local_steps"], **ROBUST_FED_KW)
+    sim0 = FedSim(lambda p, b: mlp_loss(p, b, mc), fed0, network=net)
+    sim0.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
+    timing0 = sim0._round_timing(np.asarray(staged[1][0]), 0)
+    return 2.0 * timing0.p50_client_time_s
+
+
+def measure_robustness(rounds: int) -> dict:
+    """The robustness dimension: fault-free baseline, the all-ones-mask
+    bitwise-parity arm, the (crash_prob × deadline) grid, and the
+    corruption arms. Asserts the acceptance invariants inline — parity is
+    bitwise, NaN injection keeps the loss finite and within 2x of
+    fault-free, deadline-cutoff time-to-loss beats wait-for-all on the
+    straggler-heavy network."""
+    from repro.comm.faults import FaultConfig
+    cfg = ROBUST
+    m, n = ROBUST_FED_KW["num_clients"], ROBUST_FED_KW["participating"]
+    staged = _stage_robust(rounds)
 
     base = _run_robust_arm(staged, None, 0.0)
     parity = _run_robust_arm(staged, FaultConfig(), 0.0)
@@ -709,19 +750,7 @@ def measure_robustness(rounds: int) -> dict:
         "all-ones fault mask must be bitwise-identical to fault-free",
         base["losses"][:3], parity["losses"][:3])
 
-    # deadline from the round-0 timing quantiles: ~2·p50 passes every
-    # clean client (jitter included) and cuts the 8x stragglers. The
-    # probe network is a fresh instance with the same seed — draws are
-    # keyed by (seed, id)/(seed, round), so the arms see identical links.
-    from repro.comm import NetworkConfig, SimulatedNetwork
-    net = SimulatedNetwork(
-        NetworkConfig(straggler_prob=0.2, straggler_slowdown=8.0, seed=0), m)
-    mc = MLPConfig(**cfg["mlp"])
-    fed0 = FedConfig(local_steps=cfg["local_steps"], **ROBUST_FED_KW)
-    sim0 = FedSim(lambda p, b: mlp_loss(p, b, mc), fed0, network=net)
-    sim0.init(pdefs.init_params(mlp_defs(mc), jax.random.PRNGKey(0)))
-    timing0 = sim0._round_timing(np.asarray(staged[1][0]), 0)
-    dstar = 2.0 * timing0.p50_client_time_s
+    dstar = _probe_dstar(staged, 0.2)
 
     grid = {}
     for crash in (0.0, 0.1, 0.3):
@@ -740,6 +769,13 @@ def measure_robustness(rounds: int) -> dict:
     assert corrupt["nan"]["final_loss"] <= 2.0 * base["final_loss"], (
         "NaN injection at 0.1 must stay within 2x of fault-free",
         corrupt["nan"]["final_loss"], base["final_loss"])
+
+    # billing fix regression: a deadline arm bills fewer delivered than
+    # attempted uplink bytes (cut stragglers' sends never arrive); the
+    # fault-free wait-for-all arm bills everything it attempted
+    assert grid["crash0.0_deadline"]["uplink_bytes_delivered"] < \
+        grid["crash0.0_deadline"]["uplink_bytes_attempted"]
+    assert base["uplink_bytes_delivered"] == base["uplink_bytes_attempted"]
 
     # acceptance: at straggler_prob >= 0.05 the deadline cutoff reaches
     # the shared loss target in no more simulated time than wait-for-all
@@ -766,6 +802,64 @@ def measure_robustness(rounds: int) -> dict:
                  "seed, so loss deltas isolate the fault model; dropped "
                  "clients keep stale EF residuals and repay on rejoin "
                  "(DESIGN.md §robustness)."),
+    }
+
+
+def measure_time_to_loss(rounds: int) -> dict:
+    """The time-to-loss dimension (DESIGN.md §11): sync wait-for-all vs
+    deadline cutoff vs the event-driven async buffered engine, all on the
+    shared staged inputs, swept over straggler probability. The metric is
+    cumulative simulated seconds until the loss trajectory first reaches
+    a shared target (1.02x the worst arm's final loss, so every arm gets
+    there by construction). Asserts the ISSUE acceptance ordering
+    async <= deadline <= wait_all at straggler_prob >= 0.2."""
+    staged = _stage_robust(rounds)
+    buffer = ROBUST_FED_KW["participating"] // 2
+    probs = (0.2,) if QUICK else (0.0, 0.2, 0.4)
+    sweep = {}
+    for sp in probs:
+        dstar = _probe_dstar(staged, sp)
+        arms = {
+            "wait_all": _run_robust_arm(staged, None, 0.0, straggler=sp),
+            "deadline": _run_robust_arm(staged, None, dstar, straggler=sp),
+            "async": _run_robust_arm(staged, None, 0.0, straggler=sp,
+                                     async_buffer=buffer),
+        }
+        target = 1.02 * max(a["final_loss"] for a in arms.values())
+        ttl = {k: _time_to_loss(a["losses"], a["round_times_s"], target)
+               for k, a in arms.items()}
+        assert all(np.isfinite(t) for t in ttl.values()), (sp, ttl)
+        if sp >= 0.2:
+            assert ttl["async"] <= ttl["deadline"] <= ttl["wait_all"], (
+                "async buffered rounds must reach the target loss no "
+                "later than deadline-cutoff and wait-for-all on a "
+                "straggler-heavy network", sp, ttl)
+        sweep[f"straggler{sp}"] = {
+            "deadline_s": dstar,
+            "target": target,
+            "time_to_loss_s": ttl,
+            "speedup_async_vs_wait_all": ttl["wait_all"] / ttl["async"],
+            "speedup_async_vs_deadline": ttl["deadline"] / ttl["async"],
+            "async_flushes": arms["async"]["entries"],
+            "async_staleness_max": arms["async"]["staleness_max"],
+            "arms": arms,
+        }
+    head = sweep["straggler0.2"]
+    return {
+        "config": dict(ROBUST_FED_KW, rounds=rounds, async_buffer=buffer,
+                       staleness_weight="inv_sqrt",
+                       straggler_grid=list(probs),
+                       network=dict(straggler_slowdown=8.0, seed=0)),
+        "sweep": sweep,
+        "headline": {
+            "straggler_prob": 0.2,
+            "speedup_async_vs_wait_all": head["speedup_async_vs_wait_all"],
+            "speedup_async_vs_deadline": head["speedup_async_vs_deadline"],
+        },
+        "note": ("arms share staged batches/cohorts and the network seed "
+                 "(draws keyed by (seed, round, client)), so time-to-loss "
+                 "deltas isolate the round policy; the async arm's bytes "
+                 "bill only delivered payloads (DESIGN.md §11)."),
     }
 
 
@@ -976,6 +1070,16 @@ def main():
         f"base_final_loss={rb['baseline']['final_loss']:.3f};"
         f"crash0.3_deadline_loss="
         f"{rb['grid']['crash0.3_deadline']['final_loss']:.3f}"))
+    ttl = measure_time_to_loss(20 if QUICK else 60)
+    payload["time_to_loss"] = ttl
+    hd = ttl["sweep"]["straggler0.2"]
+    rows.append(csv_row(
+        "rounds_async_time_to_loss",
+        1e6 * hd["time_to_loss_s"]["async"],
+        f"speedup_vs_wait_all={hd['speedup_async_vs_wait_all']:.2f}x;"
+        f"speedup_vs_deadline={hd['speedup_async_vs_deadline']:.2f}x;"
+        f"async_flushes={hd['async_flushes']};"
+        f"staleness_max={hd['async_staleness_max']:.0f}"))
     so = measure_scale_out(4 if QUICK else 6)
     payload["scale_out"] = so
     for m, r in so["sweep"].items():

@@ -1,0 +1,222 @@
+"""Event-driven async buffered rounds (DESIGN.md §11).
+
+A FedBuff-style server loop on top of the simulated network: instead of
+waiting for the slowest client (sync) or amputating stragglers at a
+deadline (comm.faults), the server reacts to *deliveries*. Each staged
+cohort is dispatched at the server's current simulated time; per-client
+completion times (the same ``(seed, round, client_id)``-keyed transport
+draws the sync round maxes over) schedule delivery events on an
+:class:`~repro.comm.transport.EventClock`; every ``FedConfig.async_buffer``
+deliveries the server fires one buffered aggregation, weighting each
+entry by its staleness τ (server versions advanced since its dispatch).
+
+The device work stays jitted with fixed shapes: a dispatch step is the
+existing select-once sparse uplink (EF booked at dispatch), a flush step
+consumes a fixed ``(B, k)`` masked buffer plus a weight/fill vector
+through the validated scatter (or the fused FedAMS ingest via an exact
+pre-scale). The engine itself is host-side Python — the same layer the
+transport already lives on — so the event queue never enters a trace.
+
+Determinism & parity anchor
+---------------------------
+Every draw is keyed by identity triples and the event queue breaks time
+ties by insertion order, so a run is a pure function of (config, seed).
+Buffered entries are ingested in canonical ``(dispatch cohort, slot)``
+order, not arrival order. With ``async_buffer == cohort size`` and unit
+staleness weights the loop degenerates to dispatch → full-cohort flush →
+dispatch, and every flush is bit-identical to the sync round
+(regression-tested): the acceptance anchor all async numbers flow
+through.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.faults import FaultPlan
+from repro.comm.transport import EventClock, RoundTiming
+
+# Staleness weight rules w(τ), τ = server versions advanced between an
+# entry's dispatch and its ingest. All rules give w(0) = 1.0 exactly (in
+# float64 AND after the float32 cast), which is what makes the
+# buffer==cohort parity anchor hold for every rule, not just "uniform".
+STALENESS_WEIGHTS = {
+    "uniform": lambda tau: np.ones_like(tau),
+    "inv_sqrt": lambda tau: 1.0 / np.sqrt(1.0 + tau),
+    "inv_linear": lambda tau: 1.0 / (1.0 + tau),
+    "exp": lambda tau: np.exp(-0.5 * tau),
+}
+
+
+def resolve_staleness_weight(name: str) -> Callable[[np.ndarray], np.ndarray]:
+    """Look up a staleness rule by ``FedConfig.staleness_weight`` name."""
+    try:
+        return STALENESS_WEIGHTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown staleness weight {name!r}; known: "
+            f"{sorted(STALENESS_WEIGHTS)}") from None
+
+
+class _Delivery(NamedTuple):
+    """One client payload in flight (host-side numpy rows)."""
+    cohort: int        # staged dispatch index r — canonical sort key 1
+    slot: int          # position in its cohort — canonical sort key 2
+    client: int        # global client id (diagnostics)
+    vals: np.ndarray   # (k,) received selection values
+    idx: np.ndarray    # (k,) flat coordinate indices
+    loss: float        # this client's local training loss
+    t_sent: float      # server sim-time at dispatch
+    version: int       # server version at dispatch (staleness base)
+
+
+class AsyncRoundEngine:
+    """Host-side event loop driving a FedSim's jitted dispatch/flush steps.
+
+    ``weight_fn`` (optional) overrides the configured staleness rule with
+    any ``τ-array -> weight-array`` callable (the pluggable hook the
+    config's string registry is a front-end for).
+    """
+
+    def __init__(self, sim, weight_fn: Optional[Callable] = None):
+        self.sim = sim
+        self.buffer = int(sim.fed.async_buffer)
+        self.weight_fn = weight_fn or resolve_staleness_weight(
+            sim.fed.staleness_weight)
+
+    def run(self, state, client_batches, client_idx, rngs):
+        """Consume ALL staged cohorts; return ``(new_state, mets)``.
+
+        ``client_idx``: (R, n) staged cohorts; one metric dict per FLUSH —
+        ``ceil(total deliveries / B)`` of them, which only equals R when
+        ``B == n`` and nobody crashes. ``state.round`` advances per flush
+        (the server-version counter staleness is measured against).
+        """
+        sim = self.sim
+        B = self.buffer
+        sim._ensure_async_fns()
+        idx_host = np.asarray(client_idx)
+        R, n = int(idx_host.shape[0]), int(idx_host.shape[1])
+        if B > n:
+            raise ValueError(
+                f"async_buffer={B} exceeds the staged cohort size n={n} — "
+                f"a flush could never fill")
+        up_pc = sim.codec.nbytes(sim._d)
+        down_pc = sim._down_codec.nbytes(sim._d)
+        bpm = int(sim.comp.bits_per_message(sim._d))
+        clock = EventClock()
+        errors = state.errors
+        core = (state.params, state.opt, state.server_error, state.x_client)
+        version = 0          # server flushes so far == len(mets)
+        next_r = 0           # next staged cohort to dispatch
+        # byte/fault tallies accumulated since the last flush (a flush
+        # bills everything dispatched on its watch)
+        pend = {"attempted": 0, "down": 0, "crashed": 0.0}
+        bits = state.bits
+        t_prev = 0.0
+        mets = []
+
+        def dispatch(r: int) -> None:
+            nonlocal errors
+            ridx = state.round + r  # absolute round: the transport/fault
+            # draw key AND the local-LR schedule index, same as sync staging
+            timing = sim.network.round(idx_host[r], up_pc, down_pc, ridx)
+            delivered = np.ones(n, bool)
+            fplan_dev = None
+            if sim.faults is not None:
+                fplan, finfo = sim.faults.plan(idx_host[r], ridx, timing)
+                delivered = fplan.survivors > 0  # crashed never deliver
+                pend["crashed"] += finfo["crashed"]
+                fplan_dev = FaultPlan(*(jnp.asarray(a) for a in fplan))
+            batches_r = jax.tree.map(lambda x: x[r], client_batches)
+            errors, vals, sidx, losses = sim._async_dispatch_fn(
+                errors, core[3], batches_r, jnp.asarray(idx_host[r]),
+                rngs[r], jnp.int32(ridx), fplan_dev)
+            vals_h, sidx_h = np.asarray(vals), np.asarray(sidx)
+            losses_h = np.asarray(losses)
+            t0 = clock.now  # dispatched at the server's current sim time
+            for i in range(n):
+                if delivered[i]:
+                    clock.push(
+                        t0 + float(timing.client_times_s[i]),
+                        _Delivery(r, i, int(idx_host[r, i]), vals_h[i],
+                                  sidx_h[i], float(losses_h[i]), t0,
+                                  version))
+            pend["attempted"] += timing.uplink_bytes
+            pend["down"] += timing.downlink_bytes
+
+        high_water = max(B, n)
+        while True:
+            # dispatch-ahead up to the high-water mark: keep a full
+            # cohort's worth of deliveries in flight so a straggler from
+            # cohort r never starves the buffer — cohorts r and r+1
+            # overlap and the server keeps flushing on the fast clients'
+            # cadence. At B == n the mark equals the buffer, so the loop
+            # degenerates exactly to the sync cadence (dispatch →
+            # full-cohort flush → dispatch): the parity anchor
+            while len(clock) < high_water and next_r < R:
+                dispatch(next_r)
+                next_r += 1
+            if len(clock) == 0:
+                break  # every staged cohort dispatched and drained
+            take = min(B, len(clock))
+            popped = [clock.pop() for _ in range(take)]  # time-ordered
+            t_now = clock.now
+            # canonical buffer order (dispatch cohort, slot), NOT arrival
+            # order: the flush's scatter order — and hence its bit pattern
+            # — is independent of arrival-time ties, and at B == n it is
+            # exactly the sync cohort order (the parity anchor)
+            entries = sorted((e for _, e in popped),
+                             key=lambda e: (e.cohort, e.slot))
+            k = entries[0].vals.shape[0]
+            vals_buf = np.zeros((B, k), np.float32)
+            idx_buf = np.zeros((B, k), np.int32)
+            loss_buf = np.zeros((B,), np.float32)
+            fill = np.zeros((B,), np.float32)
+            tau = np.zeros((B,), np.float64)
+            for s, e in enumerate(entries):
+                vals_buf[s], idx_buf[s], loss_buf[s] = e.vals, e.idx, e.loss
+                fill[s] = 1.0
+                tau[s] = version - e.version
+            w = (fill.astype(np.float64)
+                 * self.weight_fn(tau)).astype(np.float32)
+            core, met_dev = sim._async_flush_fn(
+                core, jnp.asarray(vals_buf), jnp.asarray(idx_buf),
+                jnp.asarray(w), jnp.asarray(fill), jnp.asarray(loss_buf))
+            version += 1
+            bits += take * bpm
+            met = dict(jax.device_get(met_dev))
+            # per-flush wall-clock is the event-time delta; the sojourn of
+            # each ingested payload plays the per-client-time role
+            sojourn = np.array([t - e.t_sent for t, e in popped])
+            dt = t_now - t_prev
+            t_prev = t_now
+            timing = RoundTiming(
+                round_time_s=dt,
+                uplink_bytes=pend["attempted"],
+                downlink_bytes=pend["down"],
+                slowest_client=popped[-1][1].client,
+                mean_client_time_s=float(sojourn.mean()),
+                client_times_s=sojourn,
+                p50_client_time_s=float(np.percentile(sojourn, 50)),
+                p90_client_time_s=float(np.percentile(sojourn, 90)),
+            )
+            met.update(sim.comm_log.record(
+                timing, delivered_uplink_bytes=take * up_pc))
+            met["bits"] = bits
+            met["staleness_mean"] = float(tau[:take].mean())
+            met["staleness_max"] = float(tau[:take].max())
+            met["buffer_fill"] = float(take)
+            met["survivors"] = float(take) - float(met["rejected"])
+            met["crashed"] = pend["crashed"]
+            pend.update(attempted=0, down=0, crashed=0.0)
+            mets.append(met)
+
+        new_state = state._replace(
+            params=core[0], opt=core[1], errors=errors,
+            server_error=core[2], x_client=core[3], bits=bits,
+            round=state.round + len(mets))
+        return new_state, mets

@@ -17,10 +17,16 @@ encoded delta up the uplink; the server waits for the slowest client:
     t_dir(i) = latency(i) + bytes_dir / bandwidth_dir(i)
 
 Everything is host-side numpy — transport runs between jitted rounds, not
-inside them — and deterministic given (seed, round index).
+inside them — and deterministic given (seed, round index, client id).
+
+The async buffered engine (comm/async_engine.py, DESIGN.md §11) reuses the
+same per-client draws but drops the max: :class:`EventClock` orders the
+per-client completion times globally so the server can react to each
+delivery instead of the slowest one.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -40,6 +46,51 @@ class NetworkConfig:
     straggler_slowdown: float = 4.0
     compute_s: float = 0.0          # fixed local-training time per round
     seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Counter-based per-(seed, round, client) draws.
+#
+# The per-round latency/straggler draws used to come from one Generator per
+# round indexed by cohort POSITION, so a client's timing changed whenever
+# the cohort was resampled or reordered. These are keyed by the identity
+# triple instead — the per-round sibling of the (seed, id) link draws — via
+# a vectorized splitmix64 chain (no per-client Generator construction on
+# the warm path).
+# ---------------------------------------------------------------------------
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64 (wraps mod 2^64)."""
+    x = x + np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+def client_round_u01(seed: int, round_idx: int, ids: np.ndarray,
+                     lane: int) -> np.ndarray:
+    """U(0, 1) draw keyed by ``(seed, round, client_id, lane)``.
+
+    Position-free and vectorized: permuting or resampling the cohort
+    permutes the outputs exactly (regression-tested); ``lane`` separates
+    independent draws for the same triple. Never returns exactly 0 (the
+    Box–Muller log below needs u > 0)."""
+    ids64 = np.asarray(ids, np.int64).astype(np.uint64)
+    h = np.full(ids64.shape, np.uint64(seed % 2 ** 64))
+    h = _splitmix64(h ^ np.uint64(round_idx % 2 ** 64))
+    h = _splitmix64(h ^ ids64)
+    h = _splitmix64(h ^ np.uint64(lane))
+    return ((h >> np.uint64(11)).astype(np.float64) + 1.0) * 2.0 ** -53
+
+
+def _client_round_normal(seed: int, round_idx: int, ids: np.ndarray,
+                         lane: int) -> np.ndarray:
+    """Standard-normal draw per (seed, round, client_id) via Box–Muller
+    over two hash lanes."""
+    u1 = client_round_u01(seed, round_idx, ids, lane)
+    u2 = client_round_u01(seed, round_idx, ids, lane + 1)
+    return np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
 
 
 @dataclass
@@ -131,11 +182,14 @@ class SimulatedNetwork:
         idx = np.asarray(client_idx, np.int64)
         n = idx.size
         up_bps, down_bps = self._links_for(idx)
-        rng = np.random.default_rng((cfg.seed + 1) * 1_000_003 + round_idx)
+        # per-round draws keyed by (seed, round, client_id) — like the link
+        # draws, a client's latency/straggler fate this round is a property
+        # of the client, not of its position in a (re)sampled cohort
+        z = _client_round_normal(cfg.seed, round_idx, idx, lane=0)
         latency = np.maximum(
-            rng.normal(cfg.latency_ms, cfg.latency_jitter_ms, n), 1.0) / 1e3
-        slow = np.where(rng.random(n) < cfg.straggler_prob,
-                        cfg.straggler_slowdown, 1.0)
+            cfg.latency_ms + cfg.latency_jitter_ms * z, 1.0) / 1e3
+        u = client_round_u01(cfg.seed, round_idx, idx, lane=2)
+        slow = np.where(u < cfg.straggler_prob, cfg.straggler_slowdown, 1.0)
         t_down = latency + downlink_bytes_per_client / down_bps
         t_up = latency + uplink_bytes_per_client / up_bps
         per_client = slow * (t_down + cfg.compute_s + t_up)
@@ -152,3 +206,34 @@ class SimulatedNetwork:
             p90_client_time_s=float(np.percentile(per_client, 90)) if n
             else 0.0,
         )
+
+
+class EventClock:
+    """Host-side simulated event clock for the async engine (DESIGN.md
+    §11): a priority queue of (absolute delivery time, payload) entries
+    plus the server's current simulated time.
+
+    ``push`` schedules a delivery; ``pop`` returns the earliest pending
+    entry and advances ``now`` to its time (the server experiences
+    deliveries in time order). Ties break on insertion order (a
+    monotonically increasing sequence number), so the order — and
+    everything downstream of it — is deterministic."""
+
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time_s: float, payload) -> None:
+        heapq.heappush(self._heap, (float(time_s), self._seq, payload))
+        self._seq += 1
+
+    def pop(self):
+        """-> (time_s, payload) of the earliest pending delivery; advances
+        ``now``. Pops are nondecreasing in time."""
+        t, _, payload = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return t, payload

@@ -226,6 +226,10 @@ FED_MESH_SPARSE_IMPLS = ("auto", "kernel", "jnp")
 FED_FUSED_INGEST = ("auto", "kernel", "jnp", "off")
 FED_SERVER_STATE_DTYPES = ("float32", "bfloat16", "int8")
 FED_LOCAL_OPTS = ("sgd", "sgdm", "prox")
+#: Staleness-weight rules for the async buffered engine
+#: (comm/async_engine.py): w(τ) applied to a delivery that trained on a
+#: model τ server versions old. "inv_sqrt" is FedBuff's 1/sqrt(1+τ).
+FED_STALENESS_WEIGHTS = ("inv_sqrt", "uniform", "inv_linear", "exp")
 
 
 @dataclass(frozen=True)
@@ -344,6 +348,24 @@ class FedConfig:
     # clock); 0 = wait for every survivor. Shorthand for a deadline-only
     # FaultConfig — set either this or fault.deadline_s, not both.
     deadline_s: float = 0.0
+    # -- event-driven async buffered rounds (DESIGN.md §11,
+    # comm/async_engine.py) -----------------------------------------------
+    # FedSim wire mode: instead of the server waiting for the whole cohort
+    # (T_round = straggler max), a host-side event clock orders per-client
+    # delivery times and the server fires one buffered aggregation every
+    # time this many deliveries accumulate, weighting each entry by its
+    # staleness (FedBuff-style). 0 = synchronous rounds. Must be in
+    # [1, cohort]; with async_buffer == cohort and "uniform" weights the
+    # engine is bit-identical to the sync round (the parity anchor).
+    # Requires the sparse (vals, idx) pipeline — the flush consumes a
+    # fixed-shape (buffer, k) Selection batch through the validated
+    # weighted scatter. Deadline cutoffs are the competing strategy
+    # (drop late work vs reweight it): setting both is rejected.
+    async_buffer: int = 0
+    # w(τ) rule for async deliveries, τ = server versions elapsed since
+    # the entry's cohort was dispatched: inv_sqrt = 1/sqrt(1+τ) (FedBuff),
+    # uniform = 1.0, inv_linear = 1/(1+τ), exp = exp(-τ/2).
+    staleness_weight: str = "inv_sqrt"
     # Full fault model: crash probability / scheduled outages / payload
     # corruption + validation-before-ingest knobs. None = fault-free
     # (bit-identical to a build without the fault machinery). When set,
@@ -458,6 +480,54 @@ class FedConfig:
                     "client_chunk — the chunked scan accumulates dense "
                     "running sums the survivor mask cannot thread "
                     "through; run the unchunked round")
+        check("staleness_weight", self.staleness_weight,
+              FED_STALENESS_WEIGHTS)
+        if self.async_buffer < 0:
+            raise ValueError(
+                f"FedConfig.async_buffer={self.async_buffer} must be >= 0")
+        if self.async_buffer > 0:
+            n_round = self.participating or self.num_clients
+            if self.async_buffer > n_round:
+                raise ValueError(
+                    f"FedConfig.async_buffer={self.async_buffer} exceeds "
+                    f"the cohort size n={n_round} — a flush would wait on "
+                    f"more deliveries than one dispatch provides")
+            if not self.wire:
+                raise ValueError(
+                    "FedConfig.async_buffer needs the simulated transport "
+                    "clock — set FedConfig(wire=True); without per-client "
+                    "delivery times there is no event order to buffer")
+            if self.compressor not in ("topk", "blocktopk") \
+                    or self.sparse_uplink is False:
+                raise ValueError(
+                    "FedConfig.async_buffer requires the select-once "
+                    "sparse (vals, idx) uplink (topk/blocktopk, "
+                    "sparse_uplink not False) — the buffered flush "
+                    "consumes a fixed-shape Selection batch through the "
+                    "validated weighted scatter")
+            if self.track_gamma:
+                raise ValueError(
+                    "FedConfig.async_buffer requires track_gamma=False — "
+                    "the γ diagnostic consumes the dense mean over a full "
+                    "synchronous cohort, which a buffered flush never "
+                    "forms")
+            if self.two_way:
+                raise ValueError(
+                    "FedConfig.async_buffer is incompatible with two_way "
+                    "— in-flight clients trained on a model the server-"
+                    "side downlink EF stream has since rewritten")
+            if self.agg_groups > 1 or self.client_chunk or self.ef_store:
+                raise ValueError(
+                    "FedConfig.async_buffer is incompatible with "
+                    "agg_groups/client_chunk/ef_store — the buffered "
+                    "flush is a flat fixed-shape (buffer, k) batch")
+            deadline = self.deadline_s or (
+                self.fault.deadline_s if self.fault is not None else 0.0)
+            if deadline > 0:
+                raise ValueError(
+                    "FedConfig.async_buffer and a round deadline are "
+                    "competing straggler strategies (reweight late work "
+                    "vs drop it) — set one")
 
 
 @dataclass(frozen=True)

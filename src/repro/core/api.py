@@ -57,6 +57,11 @@ class FederatedTrainer:
                     "network= is a simulation-backend (mesh=None) feature; "
                     "the mesh path reports measured wire_up_bytes but does "
                     "not simulate transport")
+            if self.fed.async_buffer:
+                raise ValueError(
+                    "fed.async_buffer is a simulation-backend (mesh=None) "
+                    "feature — the event-driven buffered engine drives "
+                    "FedSim's transport simulation (DESIGN.md §11)")
             tp = dict(zip(self.mesh.axis_names,
                           self.mesh.devices.shape)).get("model", 1)
             assert self.model is not None and self.model.tp == tp
@@ -132,6 +137,14 @@ class FederatedTrainer:
         rounds = rounds or self.train.rounds
         rng = jax.random.PRNGKey(self.train.seed + 1)
         t0 = time.time()
+        if self.mesh is None and self.fed.async_buffer:
+            # the async buffered engine consumes ALL staged cohorts in one
+            # run_rounds call (DESIGN.md §11) — its flush count need not
+            # equal the staged cohort count, so the whole run is one chunk;
+            # ``rounds`` then means dispatched cohorts, history rows are
+            # flushes (max(·, 2) keeps the single-round case on the staged
+            # path, which the engine requires)
+            scan_rounds = max(rounds, 2)
 
         def record(met, r):
             rec = {k: float(v) for k, v in met.items()}

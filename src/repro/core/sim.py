@@ -33,6 +33,7 @@ from repro.core.stages import (client_uplink, client_uplink_sparse,
                                resolve_fused_ingest, server_aggregate_sparse,
                                server_aggregate_sparse_grouped,
                                server_aggregate_sparse_masked,
+                               server_aggregate_sparse_weighted,
                                server_downlink)
 
 
@@ -165,6 +166,9 @@ class FedSim:
         self._efs = None  # EFStore, created in init() once d is known
         self._round_fn = None
         self._scan_fn = None
+        self._async_dispatch_fn = None
+        self._async_flush_fn = None
+        self._async = None
         self.codec = None
         self.network = None
         if network is not None and not fed.wire:
@@ -184,6 +188,13 @@ class FedSim:
             self.network = network or SimulatedNetwork(
                 NetworkConfig(), fed.num_clients)
             self.comm_log = CommLog()
+        if fed.async_buffer:
+            # event-driven buffered rounds (DESIGN.md §11): the engine owns
+            # the host-side event loop and drives the jitted dispatch/flush
+            # steps below; config validation already pinned the supported
+            # slice (wire + sparse uplink, no deadline/groups/ef_store)
+            from repro.comm.async_engine import AsyncRoundEngine
+            self._async = AsyncRoundEngine(self)
 
     def init(self, params) -> SimState:
         flat, self.unravel = ravel_pytree(params)
@@ -245,14 +256,21 @@ class FedSim:
         """Book one round's timing into the CommLog. With hierarchical
         aggregation the uplink is billed per tier: n client messages
         (tier 1, the codec bytes) plus g dense fp32 group partials pushed
-        to the root (tier 2). A fault-tolerant round overwrites the
-        server wall-clock with the injector's deadline-truncated value."""
+        to the root (tier 2). A fault-tolerant round threads the
+        injector's deadline-truncated wall-clock into the log (so
+        ``sim_time_s == Σ round_time_s``) and bills uplink bytes only for
+        the clients whose payload actually arrived — delivered-but-
+        rejected clients still count (the wire carried their bytes); the
+        full cohort's sends stay visible as the attempted diagnostic."""
+        eff_time = delivered = None
         if finfo is not None:
-            timing = dataclasses.replace(
-                timing, round_time_s=finfo["round_time_s"])
+            eff_time = finfo["round_time_s"]
+            delivered = int(finfo["survivors"]) * self.codec.nbytes(self._d)
         g = self.fed.agg_groups
         tier2 = g * 4 * self._d if g > 1 else 0
-        return self.comm_log.record(timing, tier2_bytes=tier2)
+        return self.comm_log.record(timing, tier2_bytes=tier2,
+                                    round_time_s=eff_time,
+                                    delivered_uplink_bytes=delivered)
 
     # -- one round ---------------------------------------------------------
     def round(self, state: SimState, client_batches, client_idx, rng, *,
@@ -270,6 +288,12 @@ class FedSim:
         (the NEXT round's client ids) starts the background gather for
         round r+1 right after this round is dispatched, so the host
         assembly overlaps the device compute."""
+        if self._async is not None:
+            raise ValueError(
+                "fed.async_buffer routes training through the event-driven "
+                "buffered engine, which consumes ALL staged cohorts in one "
+                "call — use run_rounds(...) (FederatedTrainer.run stages "
+                "this automatically)")
         if self._round_fn is None:
             self._round_fn = jax.jit(self._round_impl, donate_argnums=(0,))
         idx_host = np.asarray(client_idx)
@@ -328,6 +352,10 @@ class FedSim:
         round). The loop prefetches round r+1's rows while round r
         computes; metrics keep the exact :meth:`round` semantics."""
         R, n = int(client_idx.shape[0]), int(client_idx.shape[1])
+        if self._async is not None:
+            # async buffered engine (DESIGN.md §11): one metric dict per
+            # FLUSH — ceil(deliveries / B) of them, not R
+            return self._async.run(state, client_batches, client_idx, rngs)
         if self._efs is not None:
             st, mets = state, []
             for r in range(R):
@@ -526,6 +554,108 @@ class FedSim:
                "survivors": jnp.sum(surv),
                "rejected": jnp.sum(fplan.survivors * (1.0 - valid))}
         return new_core, met
+
+    # -- async buffered engine steps (DESIGN.md §11) -------------------------
+    def _ensure_async_fns(self):
+        """Build the engine's two jitted steps on first use. Dispatch
+        donates the (m, d) EF buffer; flush donates the server tuple —
+        each updates in place across the host-side event loop."""
+        if self._async_dispatch_fn is None:
+            self._async_dispatch_fn = jax.jit(self._async_dispatch_impl,
+                                              donate_argnums=(0,))
+            self._async_flush_fn = jax.jit(self._async_flush_impl,
+                                           donate_argnums=(0,))
+
+    def _async_dispatch_impl(self, errors, x_client, client_batches,
+                             client_idx, rng, round_idx,
+                             fplan: Optional[FaultPlan] = None):
+        """Client side of one async cohort: train + select-once sparse
+        uplink against the CURRENT server model, EF booked at dispatch.
+
+        The no-fault path is verbatim :meth:`_sparse_uplink_block` (the
+        sync round's client half — bitwise the parity anchor); the fault
+        path mirrors :meth:`_fault_round`'s client side: corruption
+        happens after the EF books the clean residual, and a client whose
+        payload will be rejected (or who crashed) keeps its stale EF row
+        to repay on its next dispatch. Returns
+        ``(errors, vals, idx, losses)`` — the payload the engine schedules
+        for delivery."""
+        fed = self.fed
+        n = client_idx.shape[0]
+        start = self.unravel(x_client)
+        flat0 = x_client
+        pos = jnp.arange(n)
+        eta_l = local_lr(fed, round_idx)
+        k_all = hetero_step_counts(fed, rng, n)
+        if fplan is None:
+            errors, rx_vals, sidx, _tot, _delta, losses = \
+                self._sparse_uplink_block(errors, client_idx, start, flat0,
+                                          client_batches, pos, rng, eta_l,
+                                          k_all)
+            return errors, rx_vals, sidx, losses
+        fcfg = self.faults.cfg
+        old_rows = errors[client_idx]
+        delta, losses = self._train_block(start, flat0, client_batches, rng,
+                                          eta_l, k_all)
+        tot = old_rows + delta
+        sel_vals, sidx, rx_vals = client_uplink_sparse(
+            self.comp, self.codec, flat0.size, rng, tot, pos)
+        new_rows = jax.vmap(lambda t, i, r_: t.at[i].set(r_))(
+            tot, sidx, sel_vals - rx_vals)
+        rx, ridx = (corrupt_selection(rx_vals, sidx, fplan,
+                                      fcfg.corrupt_mode)
+                    if fcfg.corrupt_prob > 0 else (rx_vals, sidx))
+        # the validation verdict is deterministic in the payload, so the
+        # dispatch-time verdict (EF rollback decision) and the flush-time
+        # re-validation agree by construction
+        _, valid = validate_selection(rx, ridx, self._sel_domain,
+                                      fcfg.max_update_norm)
+        surv = fplan.survivors * valid
+        errors = errors.at[client_idx].set(
+            jnp.where(surv[:, None] > 0, new_rows, old_rows))
+        return errors, rx, ridx, losses
+
+    def _async_flush_impl(self, core, vals, idx, w, fill, losses):
+        """Server side of one buffered flush: ingest a fixed-shape (B, k)
+        masked buffer through the validated weighted scatter (or the
+        fused FedAMS ingest via an exact pre-scale).
+
+        ``core``: (params, opt, server_error, x_client) — donated.
+        ``w``: (B,) staleness weight × fill; ``fill``: (B,) 1.0 for
+        occupied slots (a partial final flush leaves zeros). With faults
+        armed the buffer re-validates before ingest (NaN/Inf or
+        out-of-range payloads zero their weight). The fused path folds
+        the weighted mean into the ingest's ``/B`` via
+        ``scale = w·B/max(Σw, 1)`` — exactly 1.0 at unit weights, so the
+        buffer==cohort anchor stays bitwise on the fused path too."""
+        fed = self.fed
+        params, opt, server_error, x_client = core
+        d = self._d
+        rejected = jnp.zeros(())
+        if self.faults is not None:
+            fcfg = self.faults.cfg
+            vals, valid = validate_selection(vals, idx, self._sel_domain,
+                                             fcfg.max_update_norm)
+            rejected = jnp.sum(jnp.where(w > 0, 1.0 - valid, 0.0))
+            w = w * valid
+        # loss over ingested entries only (fill-masked mean)
+        loss = jnp.sum(losses * fill) / jnp.maximum(jnp.sum(fill), 1.0)
+        xflat, _ = ravel_pytree(params)
+        if self._fused != "off":
+            b = vals.shape[0]
+            scale = w * (b / jnp.maximum(jnp.sum(w), 1.0))
+            svals = jnp.where(w[:, None] > 0, vals, 0.0) * scale[:, None]
+            new_flat, opt = server_ingest(fed, opt, xflat, svals, idx, b,
+                                          block=self._ingest_block,
+                                          impl=self._fused)
+        else:
+            agg = server_aggregate_sparse_weighted(vals, idx, d, w)
+            new_flat, opt = server_update(fed, opt, xflat, agg)
+        # two_way is rejected with async (configs.base), so the downlink
+        # is the sync path's passthrough: clients see the exact new model
+        met = {"loss": loss, "gamma": jnp.zeros(()), "rejected": rejected,
+               "weight_sum": jnp.sum(w)}
+        return (self.unravel(new_flat), opt, server_error, new_flat), met
 
     def _round_impl(self, core: _CoreState, client_batches, client_idx, rng,
                     round_idx, fplan: Optional[FaultPlan] = None):

@@ -185,6 +185,23 @@ def server_aggregate_sparse_masked(vals, idx, d: int, surv):
         contrib.reshape(-1)) / n_surv
 
 
+def server_aggregate_sparse_weighted(vals, idx, d: int, w):
+    """Weighted sibling of :func:`server_aggregate_sparse_masked` for the
+    async buffered flush (DESIGN.md §11): ``w`` (n,) f32 carries each
+    buffer entry's staleness weight × validity × fill mask, the aggregate
+    is ``Σ_i w_i · vals_i / max(Σ w, 1)``. Zero-weight entries are
+    replaced by 0 with ``where`` BEFORE the multiply (a rejected payload's
+    NaN times 0.0 is still NaN). With all-ones ``w`` this is bit-identical
+    to :func:`server_aggregate_sparse`: ``vals * 1.0`` is an IEEE
+    identity, the scatter order is unchanged, and the traced f32 weight
+    sum equals the Python ``n`` divisor (the parity anchor the async
+    engine's acceptance flows through)."""
+    contrib = jnp.where(w[:, None] > 0, vals, 0.0) * w[:, None]
+    den = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.zeros(d, jnp.float32).at[idx.reshape(-1)].add(
+        contrib.reshape(-1)) / den
+
+
 def server_downlink(fed: FedConfig, comp: Optional[Compressor], codec,
                     d: int, rng, new_flat, x_client, server_error):
     """Two-way (server→client) EF compression, paper appendix D.

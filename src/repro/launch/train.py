@@ -98,6 +98,15 @@ def main(argv=None) -> None:
                     help="FedSim wire-mode only; the mesh driver rejects "
                          "it (no transport clock) — model stragglers as "
                          "crashes here")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="FedSim wire-mode only (DESIGN.md §11): fire a "
+                         "buffered async aggregation every this-many "
+                         "deliveries instead of waiting for the cohort "
+                         "(0 = synchronous); the mesh driver rejects it")
+    ap.add_argument("--staleness-weight", default="inv_sqrt",
+                    choices=("inv_sqrt", "uniform", "inv_linear", "exp"),
+                    help="async flush weight w(τ) per buffered entry, τ = "
+                         "server versions since its dispatch")
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--eta-l", type=float, default=0.05)
     ap.add_argument("--use-kernels", action="store_true")
@@ -148,6 +157,11 @@ def main(argv=None) -> None:
         ap.error("--deadline-s is FedSim wire-mode only — the mesh driver "
                  "has no transport clock to cut against; use --crash-prob "
                  "to model dropouts here")
+    if args.async_buffer > 0:
+        ap.error("--async-buffer is FedSim wire-mode only — the event-"
+                 "driven buffered engine needs the simulated transport "
+                 "clock's per-client delivery times, which the mesh "
+                 "driver does not model")
     fault = None
     if args.crash_prob > 0 or args.corrupt_prob > 0 \
             or args.max_update_norm > 0:

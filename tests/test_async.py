@@ -1,0 +1,386 @@
+"""Event-driven async buffered rounds (DESIGN.md §11): config
+validation, staleness-weight math, the buffer==cohort bitwise parity
+anchor against the sync round (scan AND loop), flush determinism, EF
+residual repayment across in-flight dispatches, fault composition, and
+delivered-vs-attempted billing under the event clock."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.comm import FaultConfig, NetworkConfig, SimulatedNetwork
+from repro.comm.async_engine import (STALENESS_WEIGHTS, AsyncRoundEngine,
+                                     resolve_staleness_weight)
+from repro.configs.base import FedConfig
+from repro.core.rounds import FedSim
+from repro.core.sampling import sample_clients
+from repro.core.stages import (server_aggregate_sparse,
+                               server_aggregate_sparse_weighted)
+from repro.data.synthetic import FederatedClassification
+from repro.models import params as pdefs
+from repro.models.convmixer import MLPConfig, mlp_defs, mlp_loss
+
+pytestmark = pytest.mark.async_rounds
+
+MC = MLPConfig(in_dim=16, hidden=32, depth=2, num_classes=4)
+DATA = FederatedClassification(num_clients=8, num_classes=4, feature_dim=16,
+                               alpha=0.5, seed=0)
+M, N, K, BS = 8, 4, 2, 8
+
+
+def _net(straggler=0.0, slowdown=8.0, seed=3):
+    return SimulatedNetwork(
+        NetworkConfig(straggler_prob=straggler, straggler_slowdown=slowdown,
+                      seed=seed), M)
+
+
+def _fed(async_buffer=0, **kw):
+    base = dict(algorithm="fedcams", eta=0.05, eta_l=0.1, local_steps=K,
+                num_clients=M, participating=N, compressor="blocktopk",
+                compress_ratio=1 / 8, track_gamma=False, wire=True,
+                async_buffer=async_buffer)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _stage(rounds, seed=0):
+    """The exact staging FederatedTrainer/run_rounds consume."""
+    rng = jax.random.PRNGKey(seed + 1)
+    idxs, keys, batches = [], [], []
+    for r in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        idx = np.asarray(sample_clients(k1, M, N))
+        batches.append(DATA.round_batches(idx, r, K, BS))
+        idxs.append(idx)
+        keys.append(k2)
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    return stacked, jnp.asarray(np.stack(idxs)), jnp.stack(keys)
+
+
+def _run(fed, rounds=6, network=None, seed=0, loop=False):
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), fed,
+                 network=network or _net())
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(seed)))
+    batches, idxs, keys = _stage(rounds, seed)
+    if loop:  # sync per-round loop path (async always takes run_rounds)
+        mets = []
+        for r in range(rounds):
+            st, met = sim.round(st, jax.tree.map(lambda x: x[r], batches),
+                                idxs[r], keys[r])
+            mets.append(met)
+        return sim, st, mets
+    st, mets = sim.run_rounds(st, batches, idxs, keys)
+    return sim, st, mets
+
+
+def _flat(st):
+    return np.concatenate(
+        [np.asarray(ravel_pytree(st.params)[0])]
+        + [np.asarray(leaf).ravel() for leaf in jax.tree.leaves(st.opt)]
+        + [np.asarray(st.errors).ravel()])
+
+
+# -- config validation -------------------------------------------------------
+
+
+def test_async_config_validation():
+    _fed(async_buffer=4)                                    # fine
+    _fed(async_buffer=2, fault=FaultConfig(crash_prob=0.1))  # composes
+    with pytest.raises(ValueError, match="exceeds"):
+        _fed(async_buffer=5)
+    with pytest.raises(ValueError, match=">= 0"):
+        _fed(async_buffer=-1)
+    with pytest.raises(ValueError, match="wire"):
+        _fed(async_buffer=4, wire=False)
+    with pytest.raises(ValueError, match="sparse"):
+        _fed(async_buffer=4, compressor="sign")
+    with pytest.raises(ValueError, match="sparse"):
+        _fed(async_buffer=4, sparse_uplink=False)
+    with pytest.raises(ValueError, match="track_gamma"):
+        _fed(async_buffer=4, track_gamma=True)
+    with pytest.raises(ValueError, match="two_way"):
+        _fed(async_buffer=4, two_way=True)
+    with pytest.raises(ValueError, match="agg_groups"):
+        _fed(async_buffer=4, agg_groups=2)
+    with pytest.raises(ValueError, match="competing straggler"):
+        _fed(async_buffer=4, deadline_s=1.0)
+    with pytest.raises(ValueError, match="competing straggler"):
+        _fed(async_buffer=4, fault=FaultConfig(deadline_s=1.0))
+    with pytest.raises(ValueError, match="staleness_weight"):
+        _fed(staleness_weight="cubic")
+
+
+def test_async_round_method_refuses():
+    sim, *_ = _run(_fed(), rounds=2)  # warm nothing; build async sim fresh
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), _fed(async_buffer=4),
+                 network=_net())
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+    batches, idxs, keys = _stage(1)
+    with pytest.raises(ValueError, match="run_rounds"):
+        sim.round(st, jax.tree.map(lambda x: x[0], batches), idxs[0],
+                  keys[0])
+
+
+# -- staleness weights -------------------------------------------------------
+
+
+def test_staleness_weight_rules():
+    tau = np.array([0.0, 1.0, 3.0, 8.0])
+    assert np.array_equal(STALENESS_WEIGHTS["uniform"](tau), np.ones(4))
+    assert np.allclose(STALENESS_WEIGHTS["inv_sqrt"](tau),
+                       1.0 / np.sqrt(1.0 + tau))
+    assert np.allclose(STALENESS_WEIGHTS["inv_linear"](tau), 1.0 / (1 + tau))
+    assert np.allclose(STALENESS_WEIGHTS["exp"](tau), np.exp(-tau / 2))
+    # w(0) must be exactly 1.0 for every rule, including after the f32
+    # cast — the buffer==cohort parity anchor leans on this
+    for name, fn in STALENESS_WEIGHTS.items():
+        assert np.float32(fn(np.zeros(1))[0]) == np.float32(1.0), name
+    with pytest.raises(ValueError, match="cubic"):
+        resolve_staleness_weight("cubic")
+    assert resolve_staleness_weight("inv_sqrt") is \
+        STALENESS_WEIGHTS["inv_sqrt"]
+
+
+def test_weighted_aggregate_stage():
+    r = np.random.default_rng(0)
+    vals = jnp.asarray(r.normal(size=(4, 8)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, 32, size=(4, 8)), jnp.int32)
+    # unit weights: bitwise the plain sparse mean (the parity anchor)
+    unit = server_aggregate_sparse_weighted(vals, idx, 32, jnp.ones(4))
+    plain = server_aggregate_sparse(vals, idx, 32, 4)
+    assert np.array_equal(np.asarray(unit), np.asarray(plain))
+    # weighted: matches the dense manual computation
+    w = jnp.asarray([1.0, 0.5, 0.0, 0.25])
+    got = np.asarray(server_aggregate_sparse_weighted(vals, idx, 32, w))
+    dense = np.zeros((4, 32), np.float32)
+    for c in range(4):
+        for j in range(8):
+            dense[c, int(idx[c, j])] += float(vals[c, j])
+    want = (np.asarray(w)[:, None] * dense).sum(0) / float(np.sum(w))
+    assert np.allclose(got, want, rtol=1e-6)
+    # zero-weight NaN payload is where()-excluded, never multiplied
+    poisoned = vals.at[2].set(jnp.nan)
+    out = server_aggregate_sparse_weighted(poisoned, idx, 32, w)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# -- the parity anchor -------------------------------------------------------
+
+
+@pytest.mark.parametrize("staleness", ["uniform", "inv_sqrt"])
+@pytest.mark.parametrize("fused", ["auto", "off"])
+def test_buffer_equals_cohort_is_bitwise_sync(staleness, fused):
+    """With async_buffer == cohort size and unit staleness weights every
+    flush must be bit-identical to the sync round — fused and unfused
+    server paths, for every weight rule (w(0) = 1 exactly)."""
+    sync_sim, st_sync, h_sync = _run(_fed(fused_ingest=fused), rounds=6)
+    async_sim, st_async, h_async = _run(
+        _fed(async_buffer=N, staleness_weight=staleness,
+             fused_ingest=fused), rounds=6)
+    assert isinstance(async_sim._async, AsyncRoundEngine)
+    if fused == "auto":  # both sides actually exercised the fused ingest
+        assert sync_sim._fused != "off" and async_sim._fused != "off"
+    assert np.array_equal(_flat(st_sync), _flat(st_async))
+    assert np.array_equal(np.asarray(st_sync.x_client),
+                          np.asarray(st_async.x_client))
+    assert st_sync.bits == st_async.bits
+    assert st_sync.round == st_async.round
+    assert len(h_async) == len(h_sync) == 6          # one flush per cohort
+    for ms, ma in zip(h_sync, h_async):
+        # loss: the async flush reduces host-roundtripped f32 copies, 1
+        # ulp from the in-jit cohort mean; state above is exact
+        assert float(ma["loss"]) == pytest.approx(float(ms["loss"]),
+                                                  rel=1e-6)
+        assert ma["wire_up_bytes"] == ms["wire_up_bytes"]
+        assert ma["wire_down_bytes"] == ms["wire_down_bytes"]
+        assert ma["bits"] == ms["bits"]
+        # event-clock delta vs straggler max: (t0 + ct) - t0 in float
+        assert ma["round_time_s"] == pytest.approx(ms["round_time_s"],
+                                                   rel=1e-12)
+        assert ma["staleness_max"] == 0.0
+        assert ma["buffer_fill"] == float(N)
+
+
+def test_parity_anchor_vs_loop_path():
+    _, st_loop, h_loop = _run(_fed(), rounds=4, loop=True)
+    _, st_async, h_async = _run(_fed(async_buffer=N), rounds=4)
+    assert np.array_equal(_flat(st_loop), _flat(st_async))
+    for ms, ma in zip(h_loop, h_async):
+        assert float(ma["loss"]) == pytest.approx(float(ms["loss"]),
+                                                  rel=1e-6)
+
+
+# -- buffered behavior (B < n) ----------------------------------------------
+
+
+def test_buffered_flushes_deterministic_and_accounted():
+    net = lambda: _net(straggler=0.3)
+    _, st1, h1 = _run(_fed(async_buffer=2), rounds=6, network=net())
+    _, st2, h2 = _run(_fed(async_buffer=2), rounds=6, network=net())
+    assert np.array_equal(_flat(st1), _flat(st2))
+    assert len(h1) == len(h2)
+    for a, b in zip(h1, h2):
+        assert a == b                    # flush-for-flush identical dicts
+    # 6 cohorts x 4 deliveries / buffer 2 = 12 flushes
+    assert len(h1) == 12
+    assert st1.round == 12
+    assert all(m["buffer_fill"] == 2.0 for m in h1)
+    # billing: sim clock is the sum of flush deltas; bytes split
+    # delivered vs attempted and agree with the flush fills
+    assert h1[-1]["sim_time_s"] == pytest.approx(
+        sum(m["round_time_s"] for m in h1), abs=1e-12)
+    up_pc = h1[0]["wire_up_bytes"] // 2
+    assert all(m["wire_up_bytes"] == 2 * up_pc for m in h1)
+    attempted = sum(m["wire_up_bytes_attempted"] for m in h1)
+    assert attempted == 6 * N * up_pc
+    # monotone nondecreasing event clock
+    assert all(m["round_time_s"] >= 0.0 for m in h1)
+
+
+def test_stragglers_create_staleness_and_downweighting():
+    """With B < n under stragglers, cohorts overlap: some payloads ingest
+    τ >= 1 flushes after dispatch, and inv_sqrt down-weights them
+    (weight_sum < buffer_fill on exactly the stale flushes)."""
+    _, st, h = _run(_fed(async_buffer=2, staleness_weight="inv_sqrt"),
+                    rounds=8, network=_net(straggler=0.4))
+    assert max(m["staleness_max"] for m in h) >= 1.0
+    assert np.isfinite(_flat(st)).all()
+    for m in h:
+        if m["staleness_max"] > 0:
+            assert m["weight_sum"] < m["buffer_fill"]
+        else:
+            assert m["weight_sum"] == pytest.approx(m["buffer_fill"])
+    # uniform weighting keeps weight_sum == fill even when stale
+    _, _, hu = _run(_fed(async_buffer=2, staleness_weight="uniform"),
+                    rounds=8, network=_net(straggler=0.4))
+    assert all(m["weight_sum"] == m["buffer_fill"] for m in hu)
+    assert max(m["staleness_max"] for m in hu) >= 1.0
+
+
+def test_custom_weight_fn_override():
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), _fed(async_buffer=2),
+                 network=_net(straggler=0.4))
+    calls = []
+
+    def wf(tau):
+        calls.append(tau.copy())
+        return np.where(tau > 0, 0.0, 1.0)   # hard-drop stale work
+
+    sim._async = AsyncRoundEngine(sim, weight_fn=wf)
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+    batches, idxs, keys = _stage(6)
+    st, mets = sim.run_rounds(st, batches, idxs, keys)
+    assert calls and np.isfinite(_flat(st)).all()
+    stale = [m for m in mets if m["staleness_max"] > 0]
+    assert stale and all(m["weight_sum"] < m["buffer_fill"] for m in stale)
+
+
+# -- EF residual repayment across in-flight dispatches -----------------------
+
+
+def test_ef_residual_repays_on_next_dispatch():
+    """A client's EF residual booked at dispatch r must shift its
+    selection at dispatch r+1 even while the first payload is still in
+    flight — bitwise vs a zeroed-residual twin: the twin's second
+    dispatch equals a fresh-EF dispatch, the real one differs."""
+    sim = FedSim(lambda p, b: mlp_loss(p, b, MC), _fed(async_buffer=4),
+                 network=_net())
+    st = sim.init(pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)))
+    sim._ensure_async_fns()
+    batches, idxs, keys = _stage(2)
+    b0 = jax.tree.map(lambda x: x[0], batches)
+    b1 = jax.tree.map(lambda x: x[1], batches)
+    # use round 0's cohort for BOTH dispatches so client rows line up
+    idx0 = idxs[0]
+    e1, v1, i1, _ = sim._async_dispatch_fn(
+        jnp.zeros_like(st.errors), st.x_client, b0, idx0, keys[0],
+        jnp.int32(0), None)
+    e1 = np.asarray(e1)
+    assert np.abs(e1[np.asarray(idx0)]).sum() > 0   # residual was booked
+    # twin: zero client 0's residual before the second dispatch
+    e1z = e1.copy()
+    e1z[int(idx0[0])] = 0.0
+    _, v2, i2, _ = sim._async_dispatch_fn(
+        jnp.asarray(e1), st.x_client, b1, idx0, keys[1], jnp.int32(1), None)
+    _, v2z, i2z, _ = sim._async_dispatch_fn(
+        jnp.asarray(e1z), st.x_client, b1, idx0, keys[1], jnp.int32(1),
+        None)
+    # client 0 repays its residual: payload differs from the zeroed twin
+    assert not (np.array_equal(np.asarray(v2[0]), np.asarray(v2z[0]))
+                and np.array_equal(np.asarray(i2[0]), np.asarray(i2z[0])))
+    # everyone else kept their residual: bitwise identical payloads
+    assert np.array_equal(np.asarray(v2[1:]), np.asarray(v2z[1:]))
+    assert np.array_equal(np.asarray(i2[1:]), np.asarray(i2z[1:]))
+
+
+# -- fault composition -------------------------------------------------------
+
+
+def test_async_with_crash_faults():
+    """Crashed clients never deliver: fewer flushes, a partial final
+    flush is fill-masked, billing splits delivered vs attempted, and the
+    model stays finite."""
+    fed = _fed(async_buffer=4, fault=FaultConfig(crash_prob=0.25, seed=2))
+    sim, st, h = _run(fed, rounds=8, network=_net(straggler=0.2))
+    delivered = sum(m["buffer_fill"] for m in h)
+    crashed = sum(m["crashed"] for m in h)
+    assert crashed > 0
+    assert delivered == 8 * N - crashed
+    assert len(h) == int(np.ceil(delivered / 4))
+    assert h[-1]["buffer_fill"] <= 4.0
+    assert np.isfinite(_flat(st)).all()
+    log = sim.comm_log
+    assert log.uplink_bytes < log.uplink_bytes_attempted
+    up_pc = sim.codec.nbytes(sim._d)
+    assert log.uplink_bytes == int(delivered) * up_pc
+    assert log.uplink_bytes_attempted == 8 * N * up_pc
+
+
+def test_async_with_corruption_validates_before_ingest():
+    fed = _fed(async_buffer=4,
+               fault=FaultConfig(corrupt_prob=0.3, corrupt_mode="nan",
+                                 seed=5))
+    _, st, h = _run(fed, rounds=8)
+    rejected = sum(m["rejected"] for m in h)
+    assert rejected > 0                       # corruption actually fired
+    assert np.isfinite(_flat(st)).all()       # ...and never reached state
+    for m in h:
+        assert np.isfinite(m["loss"])
+        assert m["survivors"] == m["buffer_fill"] - m["rejected"]
+
+
+def test_async_allones_fault_plan_matches_faultless():
+    """FaultConfig() arms the fault machinery with nobody failing — the
+    async run must produce the same model as the fault-free async run
+    (dispatch fault path + flush re-validation are transparent)."""
+    _, st0, h0 = _run(_fed(async_buffer=2), rounds=5,
+                      network=_net(straggler=0.3))
+    _, st1, h1 = _run(_fed(async_buffer=2, fault=FaultConfig()), rounds=5,
+                      network=_net(straggler=0.3))
+    assert np.allclose(_flat(st0), _flat(st1), rtol=1e-6, atol=1e-7)
+    assert len(h0) == len(h1)
+    assert all(m["rejected"] == 0.0 for m in h1)
+
+
+# -- trainer routing ---------------------------------------------------------
+
+
+def test_trainer_routes_async_and_records_flushes():
+    from repro.core.api import FederatedTrainer
+    from repro.configs.base import TrainConfig
+
+    class Data:
+        def round_batches(self, idx, r, k, bs):
+            return DATA.round_batches(idx, r, k, bs)
+
+    t = FederatedTrainer(
+        fed=_fed(async_buffer=2), train=TrainConfig(rounds=6, log_every=100),
+        loss_fn=lambda p, b: mlp_loss(p, b, MC),
+        init_params=pdefs.init_params(mlp_defs(MC), jax.random.PRNGKey(0)),
+        data=Data(), network=_net(straggler=0.3))
+    hist = t.run(6, log=None)
+    assert len(hist) == 12                   # flushes, not cohorts
+    assert all("staleness_max" in h and "wire_up_bytes" in h for h in hist)
+    assert hist[-1]["sim_time_s"] == pytest.approx(
+        sum(h["round_time_s"] for h in hist), abs=1e-9)

@@ -355,6 +355,31 @@ def test_fault_replaces_deadline_into_config():
     assert sim.faults.cfg == dataclasses.replace(fault, deadline_s=0.5)
 
 
+def test_deadline_run_sim_time_and_delivered_billing():
+    """Regression (simulated-clock billing bugfix): over a deadline run
+    the CommLog must accumulate the EFFECTIVE (deadline-truncated) round
+    times — ``sim_time_s == Σ round_time_s`` exactly — and bill uplink
+    bytes only for delivered clients, with the full cohort's sends kept
+    as the _attempted diagnostic."""
+    net = SimulatedNetwork(NetworkConfig(straggler_prob=0.5,
+                                         straggler_slowdown=50.0, seed=1), 8)
+    mets, st, _ = _run_sim(FaultConfig(deadline_s=1.0), rounds=6,
+                           network=net, wire=True)
+    cut = sum(float(m["deadline_cut"]) for m in mets)
+    assert cut > 0                         # the deadline actually fired
+    assert all(m["round_time_s"] <= 1.0 for m in mets)
+    total = sum(m["round_time_s"] for m in mets)
+    sim = mets[-1]["sim_time_s"]
+    assert sim == pytest.approx(total, abs=1e-12)
+    up_pc = mets[0]["wire_up_bytes_attempted"] // 4    # n = 4 clients
+    for m in mets:
+        assert m["wire_up_bytes_attempted"] == 4 * up_pc
+        assert m["wire_up_bytes"] == int(m["survivors"]
+                                         + m["rejected"]) * up_pc
+    assert any(m["wire_up_bytes"] < m["wire_up_bytes_attempted"]
+               for m in mets)
+
+
 # -- forced-8-device mesh ----------------------------------------------------
 
 

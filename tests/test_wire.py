@@ -310,6 +310,72 @@ def test_transport_straggler_stretches_tail():
     assert t1.round_time_s == pytest.approx(5.0 * t0.round_time_s, rel=1e-6)
 
 
+def test_per_round_draws_keyed_by_client_id_not_position():
+    """Regression: latency/straggler draws used to come from one
+    per-round Generator indexed by cohort POSITION, so permuting or
+    resampling the cohort silently changed a client's timing. They are
+    keyed by (seed, round, client_id) now: permuting the cohort permutes
+    the times exactly, and a client keeps its draw across different
+    cohorts in the same round."""
+    cfg = NetworkConfig(straggler_prob=0.3, seed=11)
+    net = SimulatedNetwork(cfg, 100)
+    idx = np.array([7, 3, 50, 42, 99, 0])
+    perm = np.array([3, 5, 0, 2, 4, 1])
+    t1 = net.round(idx, 10_000, 10_000, round_idx=4)
+    t2 = net.round(idx[perm], 10_000, 10_000, round_idx=4)
+    assert np.array_equal(t1.client_times_s[perm], t2.client_times_s)
+    assert t1.round_time_s == t2.round_time_s
+    assert t1.slowest_client == t2.slowest_client
+    # same client in a DIFFERENT cohort: identical time this round
+    t3 = net.round(np.array([42, 1, 2]), 10_000, 10_000, round_idx=4)
+    pos = int(np.where(idx == 42)[0][0])
+    assert t3.client_times_s[0] == t1.client_times_s[pos]
+    # ...and the stream still varies across rounds and seeds
+    t4 = net.round(idx, 10_000, 10_000, round_idx=5)
+    assert not np.array_equal(t1.client_times_s, t4.client_times_s)
+    other = SimulatedNetwork(NetworkConfig(straggler_prob=0.3, seed=12), 100)
+    t5 = other.round(idx, 10_000, 10_000, round_idx=4)
+    assert not np.array_equal(t1.client_times_s, t5.client_times_s)
+
+
+def test_event_clock_orders_and_breaks_ties_deterministically():
+    from repro.comm.transport import EventClock
+    clk = EventClock()
+    clk.push(2.0, "late")
+    clk.push(1.0, "early-first")
+    clk.push(1.0, "early-second")
+    assert len(clk) == 3 and clk.now == 0.0
+    t, p = clk.pop()
+    assert (t, p) == (1.0, "early-first")       # tie → insertion order
+    assert clk.pop() == (1.0, "early-second")
+    assert clk.now == 1.0
+    assert clk.pop() == (2.0, "late")
+    assert clk.now == 2.0 and len(clk) == 0
+
+
+def test_commlog_bills_delivered_not_attempted():
+    """Regression (billing bugfix): uplink_bytes must count only payloads
+    the server actually received; the full cohort's sends stay visible as
+    the _attempted diagnostic, and an explicit round_time_s override (the
+    deadline-truncated effective wall clock) is what sums into
+    sim_time_s."""
+    net = SimulatedNetwork(NetworkConfig(seed=7), 8)
+    log = CommLog()
+    t = net.round([0, 1, 2, 3], 1000, 2000, 0)
+    rec = log.record(t, round_time_s=0.5, delivered_uplink_bytes=3000)
+    assert log.uplink_bytes == 3000
+    assert log.uplink_bytes_attempted == 4000
+    assert log.sim_time_s == 0.5
+    assert rec["wire_up_bytes"] == 3000
+    assert rec["wire_up_bytes_attempted"] == 4000
+    assert rec["round_time_s"] == 0.5
+    # defaults: everything delivered, raw round time
+    rec2 = log.record(t)
+    assert log.uplink_bytes == 3000 + 4000
+    assert log.sim_time_s == 0.5 + t.round_time_s
+    assert rec2["wire_up_bytes"] == rec2["wire_up_bytes_attempted"] == 4000
+
+
 # -- FedSim wire mode --------------------------------------------------------
 
 
